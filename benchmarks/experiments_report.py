@@ -1,0 +1,113 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from artifacts.
+
+  PYTHONPATH=src python -m benchmarks.experiments_report [--mesh single]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+ART = Path("artifacts/dryrun")
+PEAK_FLOPS = 197e12
+SKIPS = [
+    ("whisper-small", "long_500k"), ("deepseek-7b", "long_500k"),
+    ("qwen3-32b", "long_500k"), ("qwen1.5-0.5b", "long_500k"),
+    ("granite-20b", "long_500k"), ("deepseek-v2-236b", "long_500k"),
+    ("deepseek-v3-671b", "long_500k"), ("paligemma-3b", "long_500k"),
+]
+
+
+def load(mesh, variant):
+    out = []
+    for p in sorted(ART.glob(f"*__{mesh}__{variant}.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def roofline_md(mesh="single", variant="baseline"):
+    rows = [
+        "| arch | shape | t_compute | t_memory | t_collective | dominant |"
+        " roofline frac | useful | mem GB/dev | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in load(mesh, variant):
+        r = c["roofline"]
+        tc, tm, tl = r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]
+        dom = max(tm, tl, tc)
+        frac = tc / dom if dom > 0 else 0.0
+        gb = c["memory"]["peak_estimate_gb"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {tc*1e3:.1f}ms | {tm*1e3:.1f}ms "
+            f"| {tl*1e3:.1f}ms | **{r['dominant']}** | {frac:.3f} | "
+            f"{r['useful_flops_ratio']:.2f} | {gb:.1f} | "
+            f"{'yes' if gb <= 16 else 'NO'} |")
+    for a, s in SKIPS:
+        rows.append(f"| {a} | {s} | — | — | — | skip (full attention; "
+                    f"DESIGN.md §Arch-applicability) | | | | |")
+    return "\n".join(rows)
+
+
+def dryrun_md():
+    rows = [
+        "| arch | shape | mesh | devices | compile | GB/dev | top collective |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for mesh in ("single", "multi"):
+        for c in load(mesh, "baseline"):
+            top = c["collectives"][0] if c["collectives"] else None
+            tops = (f"{top['op']}(g={top['group_size']}) "
+                    f"{top['wire_bytes']/2**30:.2f} GiB" if top else "—")
+            rows.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                f"{c['n_devices']} | {c['compile_s']:.0f}s | "
+                f"{c['memory']['peak_estimate_gb']:.1f} | {tops} |")
+    return "\n".join(rows)
+
+
+def variant_compare_md(arch, shape, mesh, variants):
+    rows = [
+        "| variant | t_compute | t_memory | t_collective | dominant | "
+        "args GB | peak GB | wire GB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for v in variants:
+        p = ART / f"{arch}__{shape}__{mesh}__{v}.json"
+        if not p.exists():
+            rows.append(f"| {v} | (missing) | | | | | | |")
+            continue
+        c = json.loads(p.read_text())
+        r = c["roofline"]
+        rows.append(
+            f"| {v} | {r['t_compute_s']*1e3:.2f}ms | "
+            f"{r['t_memory_s']*1e3:.2f}ms | {r['t_collective_s']*1e3:.2f}ms "
+            f"| {r['dominant']} | "
+            f"{c['memory']['argument_bytes']/2**30:.2f} | "
+            f"{c['memory']['peak_estimate_gb']:.2f} | "
+            f"{c['collective_wire_bytes_per_device']/2**30:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    print("## §Roofline (baseline, %s-pod)\n" % args.mesh)
+    print(roofline_md(args.mesh))
+    print("\n## §Dry-run\n")
+    print(dryrun_md())
+    cells = [
+        ("deepseek-7b", "decode_32k",
+         ["baseline", "flexibit", "opt_kv", "opt"]),
+        ("deepseek-v3-671b", "train_4k",
+         ["baseline", "opt", "opt+mb8", "opt_sp"]),
+        ("rwkv6-7b", "train_4k", ["baseline", "opt", "opt_sp"]),
+    ]
+    for arch, shape, variants in cells:
+        print(f"\n## §Perf {arch} x {shape}\n")
+        print(variant_compare_md(arch, shape, "single", variants))
+
+
+if __name__ == "__main__":
+    main()

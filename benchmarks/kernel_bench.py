@@ -1,0 +1,76 @@
+"""Wall-clock microbenchmarks of the JAX/Pallas layers (CPU host).
+
+Times the jitted reference dequant-matmul path and the codec throughput.
+Pallas interpret mode is a correctness vehicle, not a perf vehicle, so the
+compiled-XLA ref path is what we time here; TPU numbers come from the
+roofline analysis.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flexgemm as G
+from repro.core import formats as F
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def codec_throughput() -> List[Tuple[str, float, str]]:
+    rows = []
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(1 << 20),
+                    jnp.float32)
+    for fmt in ("e2m3", "e4m3", "e2m1"):
+        f = F.parse_format(fmt)
+        enc = jax.jit(lambda v, ff=f: F.encode(v, ff))
+        us = _time(enc, x)
+        rows.append((f"kernel/encode/{fmt}", us,
+                     f"{x.size / us:.0f} elems/us"))
+    return rows
+
+
+def packed_matmul_ref() -> List[Tuple[str, float, str]]:
+    rows = []
+    rng = np.random.default_rng(1)
+    for (m, k, n, fmt) in [(256, 1024, 1024, "e2m3"),
+                           (1, 4096, 4096, "e2m3"),
+                           (256, 1024, 1024, "e4m3")]:
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        qt = G.quantize_tensor(w, fmt, scale_mode="channel")
+        mm = jax.jit(lambda xx, q=qt: G.matmul(xx, q))
+        us = _time(mm, x)
+        flops = 2 * m * k * n
+        rows.append((f"kernel/packed_matmul_ref/{m}x{k}x{n}/{fmt}", us,
+                     f"{flops / us / 1e3:.1f} GFLOP/s"))
+    return rows
+
+
+def pallas_interpret_correctness_probe() -> List[Tuple[str, float, str]]:
+    from repro.core import flexgemm
+    from repro.kernels import ops
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((64, 128)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((128, 256)), jnp.float32)
+    qt = flexgemm.quantize_tensor(w, "e2m3", scale_mode="none")
+    t0 = time.perf_counter()
+    out = ops.packed_matmul(x, qt, interpret=True)
+    us = (time.perf_counter() - t0) * 1e6
+    err = float(jnp.max(jnp.abs(out - jnp.dot(x, flexgemm.dequantize(qt)))))
+    return [("kernel/pallas_interpret/64x128x256_e2m3", us,
+             f"max_err={err:.2e}")]
+
+
+ALL = [codec_throughput, packed_matmul_ref, pallas_interpret_correctness_probe]

@@ -1,0 +1,43 @@
+"""§Roofline aggregation: reads dry-run artifacts and emits the per-cell
+three-term roofline table (deliverable (g))."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List, Tuple
+
+ARTIFACTS = Path("artifacts/dryrun")
+
+
+def load_cells(mesh="single", variant="baseline"):
+    cells = []
+    if not ARTIFACTS.exists():
+        return cells
+    for p in sorted(ARTIFACTS.glob(f"*__{mesh}__{variant}.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def roofline_table() -> List[Tuple[str, float, str]]:
+    rows = []
+    for c in load_cells():
+        r = c["roofline"]
+        dom = r["dominant"]
+        t_dom = r[f"t_{dom}_s"]
+        rows.append((
+            f"roofline/{c['arch']}/{c['shape']}",
+            t_dom * 1e3,
+            f"dominant={dom} compute={r['t_compute_s']*1e3:.2f}ms "
+            f"memory={r['t_memory_s']*1e3:.2f}ms "
+            f"collective={r['t_collective_s']*1e3:.2f}ms "
+            f"useful={r['useful_flops_ratio']:.3f} "
+            f"mem_gb={c['memory']['peak_estimate_gb']}",
+        ))
+    if not rows:
+        rows.append(("roofline/NO_ARTIFACTS", 0.0,
+                     "run python -m repro.launch.dryrun --all first"))
+    return rows
+
+
+ALL = [roofline_table]

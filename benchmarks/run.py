@@ -1,0 +1,28 @@
+"""Benchmark driver: one function per paper table/figure + kernel timings +
+the roofline aggregation.  Prints ``name,us_per_call,derived`` CSV."""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks import kernel_bench, paper_figs, roofline
+
+    suites = paper_figs.ALL + kernel_bench.ALL + roofline.ALL
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in suites:
+        try:
+            for name, val, derived in fn():
+                print(f"{name},{val:.6g},{derived}")
+        except Exception as e:  # keep the harness running
+            failures += 1
+            print(f"{fn.__name__},NaN,ERROR: {e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Mixed-precision design-space exploration — the workflow FlexiBit unlocks.
+
+The paper's argument (§2.2): hardware that only supports power-of-two
+precisions forces quantization research to jump FP8 -> FP4; flexible
+hardware lets you trade accuracy for bits on a fine grid (FP7, FP6, FP5...)
+*per layer class*.  This example sweeps arbitrary ExMy policies on a small
+LM and reports weight memory vs output fidelity — every policy here runs on
+the same packed-GEMM path the dry-run lowers for TPU.
+
+Run:  PYTHONPATH=src python examples/mixed_precision_sweep.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.configs.base import QuantPolicy
+from repro.models.nn import init_params, quantize_params
+from repro.models.registry import build_model
+
+POLICIES = [
+    ("fp16 (baseline)", None),
+    ("W8: attn e4m3 / mlp e4m3", QuantPolicy(attn="e4m3", mlp="e4m3")),
+    ("W7: attn e4m2 / mlp e3m3", QuantPolicy(attn="e4m2", mlp="e3m3")),
+    ("W6: attn e3m2 / mlp e2m3", QuantPolicy(attn="e3m2", mlp="e2m3")),
+    ("W5: attn e2m2 / mlp e2m2", QuantPolicy(attn="e2m2", mlp="e2m2")),
+    ("W4: attn e2m1 / mlp e2m1", QuantPolicy(attn="e2m1", mlp="e2m1")),
+    ("mixed: attn e4m3 / mlp e2m1", QuantPolicy(attn="e4m3", mlp="e2m1")),
+    ("int: attn int8 / mlp int4", QuantPolicy(attn="int8", mlp="int4")),
+]
+
+
+def main():
+    cfg = reduce_for_smoke(get_config("deepseek-7b")).with_(
+        n_layers=4, d_model=256, d_ff=512)
+    base = build_model(cfg)
+    params = init_params(base.param_specs(), jax.random.key(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(4, 32)),
+                       jnp.int32)
+    ref_logits, _ = jax.jit(base.forward)(params, toks)
+    ref = np.asarray(ref_logits, np.float32)
+
+    def tree_bytes(t):
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(t))
+
+    print(f"{'policy':32s} {'MiB':>8s} {'logit MSE':>10s} {'top1 agree':>10s}")
+    for name, pol in POLICIES:
+        if pol is None:
+            mib = tree_bytes(params) / 2**20 / 2  # fp16 serving copy
+            print(f"{name:32s} {mib:8.2f} {'0':>10s} {'100.0%':>10s}")
+            continue
+        m = build_model(cfg.with_(quant=pol))
+        qp = quantize_params(m.serve_param_specs(), params)
+        logits, _ = jax.jit(m.forward)(qp, toks)
+        got = np.asarray(logits, np.float32)
+        mse = float(np.mean((got - ref) ** 2))
+        agree = float((got.argmax(-1) == ref.argmax(-1)).mean())
+        mib = tree_bytes(qp) / 2**20
+        print(f"{name:32s} {mib:8.2f} {mse:10.4f} {agree:9.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+from .base import (  # noqa: F401
+    ArchConfig,
+    MLAConfig,
+    MoEConfig,
+    QuantPolicy,
+    RWKVConfig,
+    ShapeConfig,
+    SHAPES,
+    SSMConfig,
+    applicable_shapes,
+)
+from .registry import ARCH_IDS, get_config, reduce_for_smoke  # noqa: F401

@@ -1,0 +1,182 @@
+"""Architecture + shape configuration schema.
+
+Every assigned architecture is one `ArchConfig` in `repro/configs/<id>.py`;
+the four benchmark shapes (train_4k / prefill_32k / decode_32k / long_500k)
+are `ShapeConfig`s.  `applicable_shapes` encodes the skip rules from the
+assignment (no 500k decode for pure full-attention archs, etc.).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+    dispatch_dtype: str = None  # e.g. 'float8_e4m3fn': quantized all_to_all
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora: int = 512
+    q_lora: Optional[int] = 1536
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-style selective SSM (hymba's parallel heads)."""
+
+    state: int = 16
+    expand: int = 2
+    conv_width: int = 4
+    dt_rank: int = 0  # 0 -> d_model // 16
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Whisper-style encoder; the audio conv frontend is a STUB — input
+    specs carry precomputed frame embeddings (B, n_frames, d_model)."""
+
+    n_layers: int = 12
+    n_frames: int = 1500
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionStubConfig:
+    """PaliGemma SigLIP stub: precomputed patch embeddings (B, n_patches,
+    d_model) prepended as a bidirectional prefix."""
+
+    n_patches: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """FlexiBit arbitrary-format mixed-precision policy (first-class).
+
+    Format strings are arbitrary 'eXmY' / 'intB'; None keeps a tensor in
+    the training dtype.  `mode`: 'qat' fake-quantizes in the forward pass;
+    'packed' stores weights as bit-packed QTensors (serving).
+    """
+
+    mode: str = "packed"  # 'packed' | 'qat'
+    attn: Optional[str] = "e4m3"
+    mlp: Optional[str] = "e2m3"
+    embed: Optional[str] = None
+    lm_head: Optional[str] = None
+    kv_cache: Optional[str] = None  # e.g. 'e5m2' / 'int8'
+    scale_mode: str = "channel"
+    block: int = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    # attention
+    pos_embed: str = "rope"  # rope | sinusoidal (whisper)
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    sliding_window: Optional[int] = None
+    logit_soft_cap: Optional[float] = None
+    # block
+    norm_type: str = "rmsnorm"
+    act: str = "swiglu"
+    tie_embeddings: bool = False
+    # sub-configs
+    moe: Optional[MoEConfig] = None
+    first_dense_layers: int = 0
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    vision_stub: Optional[VisionStubConfig] = None
+    # quantization (FlexiBit technique)
+    quant: Optional[QuantPolicy] = None
+    # misc
+    vocab_pad_to: int = 2048
+    remat: bool = True
+    attn_chunk: int = 1024
+    # dry-run cost-measurement knobs: unroll scans so XLA's cost analysis
+    # (which counts loop bodies once) sees true trip counts
+    scan_unroll: bool = False
+    attn_unroll: bool = False
+    # §Perf lever: bf16 attention/ssm operands with f32 accumulation
+    lowp_attn: bool = False
+    # §Perf lever: shard the sequence dim over 'model' between blocks
+    # (GSPMD then uses reduce-scatter + all-gather instead of all-reduce)
+    seq_parallel: bool = False
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        v, p = self.vocab_size, self.vocab_pad_to
+        return ((v + p - 1) // p) * p
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch decode at 500k context? SSM / hybrid-with-SWA yes;
+        pure full-attention no."""
+        return self.family in ("ssm", "hybrid")
+
+    def with_(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable_shapes(cfg: ArchConfig) -> Tuple[str, ...]:
+    """The assignment's skip rules (documented in DESIGN.md)."""
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        names.append("long_500k")
+    return tuple(names)
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]

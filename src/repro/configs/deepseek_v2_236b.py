@@ -1,0 +1,23 @@
+"""deepseek-v2-236b [moe]: MLA (kv_lora=512) + 160 routed experts top-6,
+2 shared experts; first layer dense.
+
+60L d_model=5120 128H d_ff_expert=1536 vocab=102400. [arXiv:2405.04434]
+Dense first-layer FFN width 12288.
+"""
+
+from .base import ArchConfig, MLAConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=12288,  # the dense first layer
+    vocab_size=102400,
+    mla=MLAConfig(kv_lora=512, q_lora=1536, rope_head_dim=64,
+                  nope_head_dim=128, v_head_dim=128),
+    moe=MoEConfig(n_experts=160, top_k=6, d_ff_expert=1536, n_shared=2),
+    first_dense_layers=1,
+)

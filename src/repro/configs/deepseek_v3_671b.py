@@ -1,0 +1,23 @@
+"""deepseek-v3-671b [moe]: MLA + 256 routed experts top-8, 1 shared;
+first three layers dense.  MTP head not modeled (DESIGN.md).
+
+61L d_model=7168 128H d_ff_expert=2048 vocab=129280. [arXiv:2412.19437]
+Dense first-layer FFN width 18432.
+"""
+
+from .base import ArchConfig, MLAConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=18432,  # the dense first layers
+    vocab_size=129280,
+    mla=MLAConfig(kv_lora=512, q_lora=1536, rope_head_dim=64,
+                  nope_head_dim=128, v_head_dim=128),
+    moe=MoEConfig(n_experts=256, top_k=8, d_ff_expert=2048, n_shared=1),
+    first_dense_layers=3,
+)

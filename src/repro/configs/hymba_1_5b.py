@@ -1,0 +1,25 @@
+"""hymba-1.5b [hybrid]: parallel attention + mamba heads per layer.
+
+32L d_model=1600 25H (GQA kv=5, head_dim 64) d_ff=5504 vocab=32001,
+ssm_state=16.  [arXiv:2411.13676; hf]
+
+Adaptation notes (DESIGN.md §Arch-applicability): local attention heads use
+a 2048-token sliding window; the mamba path carries global context (hymba's
+design rationale).  Meta-tokens are not modeled.
+"""
+
+from .base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32001,
+    head_dim=64,
+    sliding_window=2048,
+    ssm=SSMConfig(state=16, expand=2, conv_width=4),
+)

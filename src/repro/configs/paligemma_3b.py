@@ -1,0 +1,23 @@
+"""paligemma-3b [vlm]: SigLIP stub + gemma backbone (prefix-LM).
+
+18L d_model=2048 8H (kv=1, head_dim=256) d_ff=16384 vocab=257216.
+[arXiv:2407.07726]  The SigLIP tower is a STUB: input_specs() provides 256
+precomputed patch embeddings already projected to d_model.
+"""
+
+from .base import ArchConfig, VisionStubConfig
+
+CONFIG = ArchConfig(
+    name="paligemma-3b",
+    family="vlm",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    d_ff=16384,
+    vocab_size=257216,
+    head_dim=256,
+    act="geglu",
+    tie_embeddings=True,
+    vision_stub=VisionStubConfig(n_patches=256),
+)

@@ -1,0 +1,78 @@
+"""Architecture registry + smoke-test reducer."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict
+
+from .base import ArchConfig, MLAConfig, MoEConfig, RWKVConfig, SSMConfig
+
+ARCH_IDS = (
+    "hymba-1.5b",
+    "whisper-small",
+    "deepseek-7b",
+    "qwen3-32b",
+    "qwen1.5-0.5b",
+    "granite-20b",
+    "deepseek-v2-236b",
+    "deepseek-v3-671b",
+    "rwkv6-7b",
+    "paligemma-3b",
+)
+
+_MODULES = {i: "repro.configs." + i.replace("-", "_").replace(".", "_")
+            for i in ARCH_IDS}
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch_id]).CONFIG
+
+
+def reduce_for_smoke(cfg: ArchConfig) -> ArchConfig:
+    """Shrink a config to CPU-smoke scale, preserving the family structure
+    (MoE stays MoE with fewer experts, MLA keeps its low-rank shape, etc.)."""
+    kw = dict(
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_ff=256,
+        vocab_size=503,  # deliberately ragged: exercises vocab padding
+        head_dim=32,
+        vocab_pad_to=64,
+        attn_chunk=64,
+        remat=False,
+    )
+    if cfg.sliding_window:
+        kw["sliding_window"] = 32
+    if cfg.moe:
+        kw["moe"] = MoEConfig(
+            n_experts=8,
+            top_k=2,
+            d_ff_expert=64,
+            n_shared=min(cfg.moe.n_shared, 1),
+            # large capacity so smoke/consistency tests are drop-free and
+            # therefore bit-comparable between prefill and forward
+            capacity_factor=8.0,
+        )
+        kw["first_dense_layers"] = min(cfg.first_dense_layers, 1)
+        kw["n_layers"] = 3
+    if cfg.mla:
+        kw["mla"] = MLAConfig(kv_lora=32, q_lora=48, rope_head_dim=16,
+                              nope_head_dim=32, v_head_dim=32)
+        kw["head_dim"] = None
+    if cfg.ssm:
+        kw["ssm"] = SSMConfig(state=4, expand=2, conv_width=4)
+    if cfg.rwkv:
+        kw["rwkv"] = RWKVConfig(head_dim=32, decay_lora=16)
+        kw["n_heads"] = 4
+        kw["n_kv_heads"] = 4
+    if cfg.encoder:
+        kw["encoder"] = dataclasses.replace(cfg.encoder, n_layers=2,
+                                            n_frames=24)
+    if cfg.vision_stub:
+        kw["vision_stub"] = dataclasses.replace(cfg.vision_stub, n_patches=8)
+    return cfg.with_(**kw)

@@ -1,0 +1,18 @@
+"""rwkv6-7b [ssm]: Finch — attention-free, data-dependent decay.
+
+32L d_model=4096 d_ff=14336 vocab=65536. [arXiv:2404.05892]
+"""
+
+from .base import ArchConfig, RWKVConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,  # d_model / head_dim
+    n_kv_heads=64,
+    d_ff=14336,
+    vocab_size=65536,
+    rwkv=RWKVConfig(head_dim=64, decay_lora=64),
+)

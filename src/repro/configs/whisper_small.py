@@ -1,0 +1,26 @@
+"""whisper-small [audio]: encoder-decoder, conv audio frontend stubbed.
+
+12L (decoder) d_model=768 12H (kv=12) d_ff=3072 vocab=51865.
+[arXiv:2212.04356]
+
+The conv/log-mel frontend is a STUB: input_specs() provides precomputed
+frame embeddings (B, 1500, 768).  Learned positional tables are replaced by
+sinusoids so 4k/32k-token decoder cells are well-defined (DESIGN.md).
+"""
+
+from .base import ArchConfig, EncoderConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small",
+    family="encdec",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    norm_type="layernorm",
+    act="gelu",
+    pos_embed="sinusoidal",
+    encoder=EncoderConfig(n_layers=12, n_frames=1500),
+)

@@ -1,0 +1,26 @@
+"""FlexiBit core: arbitrary-precision formats, bit packing, flexible GEMM,
+and the bit-level FBRT/FBEA functional models of the paper's PE."""
+
+from .formats import (  # noqa: F401
+    BF16,
+    FP4_E2M1,
+    FP5_E2M2,
+    FP6_E2M3,
+    FP6_E3M2,
+    FP8_E4M3,
+    FP8_E5M2,
+    FP16,
+    INT4,
+    INT8,
+    BlockScaleSpec,
+    FloatFormat,
+    Format,
+    IntFormat,
+    decode,
+    encode,
+    fake_quant,
+    parse_format,
+    quantize,
+)
+from .bitpack import pack_codes, unpack_codes, packed_words, group_size  # noqa: F401
+from .flexgemm import QTensor, dequantize, matmul, quantize_tensor  # noqa: F401

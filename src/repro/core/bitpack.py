@@ -1,0 +1,115 @@
+"""Bit-packing: dense storage of arbitrary-precision codes (paper §4.1).
+
+FlexiBit stores non-power-of-two precision data back-to-back with **no
+padding**: a b-bit code stream occupies exactly b bits per element.  This is
+the memory-side half of the paper's contribution (their BPU), and the reason
+FlexiBit moves 6/16ths of the bytes a padded FP16 pipeline moves for FP6.
+
+TPU adaptation: we pack codes into little-endian ``uint32`` words in *groups*
+of ``g = lcm(b, 32) / b`` codes (``g*b/32`` words per group) so that the
+word/bit offsets of every code within a group are static.  Packing and
+unpacking are then fully vectorized static-unrolled shifts/ors — no gathers —
+which maps cleanly onto the TPU VPU inside Pallas kernels and onto XLA:CPU
+for the reference path.
+
+Layout: code ``j`` of a group occupies bits ``[j*b, (j+1)*b)`` of the group's
+``g*b``-bit little-endian bit-string.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "group_size",
+    "words_per_group",
+    "packed_words",
+    "pack_codes",
+    "unpack_codes",
+    "packed_bytes_per_element",
+]
+
+
+def group_size(bits: int) -> int:
+    """Number of codes per packing group (static layout period)."""
+    return math.lcm(bits, 32) // bits
+
+
+def words_per_group(bits: int) -> int:
+    return math.lcm(bits, 32) // 32
+
+
+def packed_words(n: int, bits: int) -> int:
+    """uint32 words needed for n codes (n must be a multiple of group_size)."""
+    g = group_size(bits)
+    if n % g != 0:
+        raise ValueError(f"n={n} must be a multiple of group_size({bits})={g}")
+    return (n // g) * words_per_group(bits)
+
+
+def packed_bytes_per_element(bits: int) -> float:
+    return bits / 8.0
+
+
+def pack_codes(codes: jax.Array, bits: int) -> jax.Array:
+    """Pack uint32 codes (values < 2**bits) along the last axis.
+
+    codes: (..., n) uint32 with n % group_size(bits) == 0
+    returns: (..., n*bits/32) uint32
+    """
+    if not (1 <= bits <= 32):
+        raise ValueError(f"bits must be in [1,32], got {bits}")
+    g = group_size(bits)
+    w = words_per_group(bits)
+    n = codes.shape[-1]
+    if n % g != 0:
+        raise ValueError(f"last axis {n} not a multiple of group size {g}")
+    c = codes.astype(jnp.uint32).reshape(codes.shape[:-1] + (n // g, g))
+    mask = jnp.uint32((1 << bits) - 1) if bits < 32 else jnp.uint32(0xFFFFFFFF)
+    c = c & mask
+    out_words = []
+    for k in range(w):  # static unroll: w <= bits <= 32 words per group
+        word = jnp.zeros(c.shape[:-1], dtype=jnp.uint32)
+        for j in range(g):  # static unroll: g <= 32 codes per group
+            lo, hi = j * bits, (j + 1) * bits
+            if hi <= 32 * k or lo >= 32 * (k + 1):
+                continue
+            shift = lo - 32 * k
+            if shift >= 0:
+                piece = c[..., j] << shift
+            else:
+                piece = c[..., j] >> (-shift)
+            word = word | piece
+        out_words.append(word)
+    packed = jnp.stack(out_words, axis=-1)
+    return packed.reshape(codes.shape[:-1] + ((n // g) * w,))
+
+
+def unpack_codes(words: jax.Array, bits: int, n: int) -> jax.Array:
+    """Inverse of pack_codes: (..., n*bits/32) uint32 -> (..., n) uint32."""
+    g = group_size(bits)
+    w = words_per_group(bits)
+    if n % g != 0:
+        raise ValueError(f"n={n} not a multiple of group size {g}")
+    ngroups = n // g
+    if words.shape[-1] != ngroups * w:
+        raise ValueError(
+            f"expected last axis {ngroups * w}, got {words.shape[-1]}"
+        )
+    ws = words.astype(jnp.uint32).reshape(words.shape[:-1] + (ngroups, w))
+    mask = jnp.uint32((1 << bits) - 1) if bits < 32 else jnp.uint32(0xFFFFFFFF)
+    cols = []
+    for j in range(g):  # static unroll
+        lo = j * bits
+        w0, off = lo // 32, lo % 32
+        c = ws[..., w0] >> off
+        if off + bits > 32:  # code straddles a word boundary
+            c = c | (ws[..., w0 + 1] << (32 - off))
+        cols.append(c & mask)
+    codes = jnp.stack(cols, axis=-1)
+    return codes.reshape(words.shape[:-1] + (n,))

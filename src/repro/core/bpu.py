@@ -1,0 +1,99 @@
+"""Faithful emulation of FlexiBit's Bit Packing/Unpacking Unit (paper §4.1).
+
+The hardware BPU is a 64-to-64 crossbar fed by a 64-bit off-chip channel
+carrying *padded* data (each ``precision``-bit value stored in a
+``container``-bit field, e.g. FP6 values in 8-bit fields).  It strips the
+padding and emits a densely packed stream, double-buffered into SRAM.
+
+Mapping formula from the paper (container c = 8 generalized):
+
+    j = start_idx + i - floor(i / c) * (c - precision)
+
+for every *useful* bit position i of the incoming channel word; bits with
+``i mod c >= precision`` are masked.  After each channel word,
+``start_idx += precision * (channel_bits / c)``.
+
+This module is a cycle-faithful functional model (numpy ints, one channel
+word per step) used to validate the vectorized `bitpack.pack_codes` layout:
+both produce the identical little-endian packed bit stream.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, List
+
+import numpy as np
+
+__all__ = ["BitPackingUnit", "pack_padded_stream", "unpack_to_padded_stream"]
+
+
+class BitPackingUnit:
+    """Processes one channel word per `step`; collects packed 32-bit words."""
+
+    def __init__(self, precision: int, container: int = 8, channel_bits: int = 64):
+        if not (1 <= precision <= container):
+            raise ValueError("need 1 <= precision <= container")
+        if channel_bits % container != 0:
+            raise ValueError("channel must hold an integer number of containers")
+        self.precision = precision
+        self.container = container
+        self.channel_bits = channel_bits
+        self.values_per_word = channel_bits // container
+        self.start_idx = 0
+        self._acc = 0  # packed bit accumulator (arbitrary precision int)
+        self._emitted_words: List[int] = []
+
+    def step(self, channel_word: int) -> None:
+        """Consume one channel word of padded data (LSB-first bit order)."""
+        c, p = self.container, self.precision
+        for i in range(self.channel_bits):
+            if i % c >= p:
+                continue  # padding bit: masked by the crossbar
+            bit = (channel_word >> i) & 1
+            j = self.start_idx + i - (i // c) * (c - p)
+            self._acc |= bit << j
+        self.start_idx += p * self.values_per_word
+        # double buffering: flush completed 32-bit words to SRAM
+        while self.start_idx - len(self._emitted_words) * 32 >= 32:
+            w = (self._acc >> (len(self._emitted_words) * 32)) & 0xFFFFFFFF
+            self._emitted_words.append(w)
+
+    def flush(self) -> np.ndarray:
+        """Emit all packed words (including a final partial word)."""
+        total_bits = self.start_idx
+        nwords = (total_bits + 31) // 32
+        while len(self._emitted_words) < nwords:
+            w = (self._acc >> (len(self._emitted_words) * 32)) & 0xFFFFFFFF
+            self._emitted_words.append(w)
+        return np.array(self._emitted_words, dtype=np.uint32)
+
+
+def pack_padded_stream(
+    codes: Iterable[int], precision: int, container: int = 8, channel_bits: int = 64
+) -> np.ndarray:
+    """Convenience driver: pad codes into channel words, run the BPU."""
+    codes = list(int(c) for c in codes)
+    vpw = channel_bits // container
+    if len(codes) % vpw != 0:
+        raise ValueError(f"need a multiple of {vpw} codes")
+    bpu = BitPackingUnit(precision, container, channel_bits)
+    for w0 in range(0, len(codes), vpw):
+        word = 0
+        for k, code in enumerate(codes[w0 : w0 + vpw]):
+            word |= (code & ((1 << precision) - 1)) << (k * container)
+        bpu.step(word)
+    return bpu.flush()
+
+
+def unpack_to_padded_stream(
+    packed: np.ndarray, n: int, precision: int, container: int = 8
+) -> np.ndarray:
+    """The inverse unit (used before writing back to host memory)."""
+    acc = 0
+    for k, w in enumerate(np.asarray(packed, dtype=np.uint64)):
+        acc |= int(w) << (32 * k)
+    out = np.zeros(n, dtype=np.uint32)
+    mask = (1 << precision) - 1
+    for j in range(n):
+        out[j] = (acc >> (j * precision)) & mask
+    return out

@@ -1,0 +1,97 @@
+"""Flexible Bit Exponent Adder (paper §3.5, Fig 6) — segmentable carry chain.
+
+An L_add-bit ripple-carry adder whose carry chain can be broken at arbitrary
+positions by a control word (Code 4), so one physical adder performs many
+narrow additions (low precision) or few wide ones (high precision) per cycle.
+
+`segmented_add` is the gate-level functional model (full adder + carry mux
+per bit); `exponent_sum` is the PE's exponent datapath built from it:
+e_out = e_A + e_W - bias_A - bias_B, evaluated in two segmented passes using
+two's-complement bias addition, exactly as a hardware FBEA would.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+from .formats import FloatFormat
+
+__all__ = ["fbea_control", "segmented_add", "exponent_sum", "pack_segments"]
+
+
+def fbea_control(add_width: int, l_add: int) -> List[int]:
+    """Code 4: ctrl[i] = 1 breaks the carry chain after bit i."""
+    return [1 if (i + 1) % add_width == 0 else 0 for i in range(l_add)]
+
+
+def segmented_add(
+    a_bits: Sequence[int], b_bits: Sequence[int], ctrl: Sequence[int]
+) -> List[int]:
+    """Gate-level segmented ripple-carry add (Fig 6).
+
+    Between consecutive full adders a mux either propagates the carry or
+    injects 0 (segment boundary).  Carry out of each segment is dropped —
+    results wrap mod 2^segment_width, as real fixed-width hardware does.
+    """
+    n = len(a_bits)
+    assert len(b_bits) == n and len(ctrl) == n
+    out = [0] * n
+    carry = 0
+    for i in range(n):
+        s = a_bits[i] ^ b_bits[i] ^ carry
+        cout = (a_bits[i] & b_bits[i]) | (carry & (a_bits[i] ^ b_bits[i]))
+        out[i] = s
+        carry = 0 if ctrl[i] else cout
+    return out
+
+
+def pack_segments(values: Sequence[int], width: int, l_add: int) -> List[int]:
+    """Lay integer values into the adder's bit lanes, LSB first per segment."""
+    bits = [0] * l_add
+    for k, v in enumerate(values):
+        v &= (1 << width) - 1
+        for i in range(width):
+            pos = k * width + i
+            if pos >= l_add:
+                raise ValueError("values exceed FBEA width")
+            bits[pos] = (v >> i) & 1
+    return bits
+
+
+def unpack_segments(bits: Sequence[int], width: int, count: int) -> List[int]:
+    out = []
+    for k in range(count):
+        v = 0
+        for i in range(width):
+            v |= bits[k * width + i] << i
+        out.append(v)
+    return out
+
+
+def segmented_add_ints(
+    a_vals: Sequence[int], b_vals: Sequence[int], width: int, l_add: int = 144
+) -> List[int]:
+    """Convenience wrapper: many independent width-bit adds in one pass."""
+    ctrl = fbea_control(width, l_add)
+    a = pack_segments(a_vals, width, l_add)
+    b = pack_segments(b_vals, width, l_add)
+    s = segmented_add(a, b, ctrl)
+    return unpack_segments(s, width, len(a_vals))
+
+
+def exponent_sum(e_a: int, e_w: int, fmt_a: FloatFormat, fmt_w: FloatFormat) -> int:
+    """Unbiased exponent of a product: (e_a - bias_a) + (e_w - bias_w).
+
+    Evaluated through the segmented adder in two passes (operands, then the
+    two's complement of the combined bias), with a width big enough to hold
+    the carry — the ANU consumes this value for normalization (§3.8).
+    """
+    width = max(fmt_a.exp_bits, fmt_w.exp_bits) + 2
+    total_bias = fmt_a.bias + fmt_w.bias
+    (s1,) = segmented_add_ints([e_a], [e_w], width, l_add=width)
+    neg_bias = (-total_bias) & ((1 << width) - 1)
+    (s2,) = segmented_add_ints([s1], [neg_bias], width, l_add=width)
+    # interpret as signed two's complement
+    if s2 >= 1 << (width - 1):
+        s2 -= 1 << width
+    return s2

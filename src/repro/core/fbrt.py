@@ -1,0 +1,400 @@
+"""Structural emulation of FlexiBit's PE datapath (paper §3).
+
+This is the *faithful reproduction* of the paper's primary hardware
+contribution, as a bit-level functional model:
+
+* ``separate``            — Sign/Exponent/Mantissa Separator (§3.2, Code 1)
+* ``primitive_schedule``  — Primitive Generator layout (§3.3, Code 2)
+* ``FBRT``                — Flexible-Bit Reduction Tree (§3.4, Fig 3d/4),
+                            including switch modes C2/C3/A2/A3/CA/D and the
+                            additional (neighbor) links
+* ``with_implicit_ones``  — implicit-1 correction (§3.4, Fig 5)
+* ``flexibit_multiply``   — the full PE multiplication pipeline: separator →
+                            primitive generator → FBRT → implicit-1 → FBEA
+                            exponent add → normalization
+
+The model operates on Python integers (bit-exact, arbitrary precision) — it
+is the oracle the JAX fast path (`core.flexgemm`) and the Pallas kernel are
+validated against, and the ground truth for the PE utilization model used by
+the performance simulator (`repro.perfmodel`).
+
+Hardware-parameter defaults follow Table 1 of the paper:
+reg_width=24, R_M=R_E=R_S=12, L_prim=L_Add=L_Acc=L_CST=144.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import Counter
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .formats import FloatFormat
+
+__all__ = [
+    "PEParams",
+    "Primitive",
+    "primitive_schedule",
+    "separate",
+    "FBRT",
+    "with_implicit_ones",
+    "flexibit_multiply",
+    "ops_per_cycle",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PEParams:
+    """Design-time PE parameters (paper Table 1)."""
+
+    reg_width: int = 24  # weight/act register bit width
+    r_m: int = 12  # mantissa register bit width
+    r_e: int = 12  # exponent register bit width
+    r_s: int = 12  # sign register bit width
+    l_prim: int = 144  # primitive generator width
+    l_add: int = 144  # FBEA width
+    l_acc: int = 144  # accumulator width
+    l_cst: int = 144  # concat-shift tree width
+
+
+# ---------------------------------------------------------------------------
+# §3.2  Sign / Exponent / Mantissa Separator  (Code 1)
+# ---------------------------------------------------------------------------
+
+
+def separate(
+    stream_bits: Sequence[int], fmt: FloatFormat, params: PEParams = PEParams()
+) -> Tuple[List[int], List[int], List[int]]:
+    """Route a back-to-back packed register into sign/exp/mantissa registers.
+
+    ``stream_bits`` is `reg_width` bits, elements packed MSB-first (the sign
+    bit of each element arrives first, matching Code 1's ``act_bitid == 0``
+    sign case).  Returns per-element (signs, exponents, mantissas) as ints.
+    """
+    p = fmt.bits
+    e_bits, m_bits = fmt.exp_bits, fmt.man_bits
+    n_elems = params.reg_width // p
+    signs = [0] * n_elems
+    exps = [0] * n_elems
+    mants = [0] * n_elems
+    for i in range(n_elems * p):  # Code 1 iterates the register bit stream
+        elem_id = i // p
+        bit_id = i % p
+        b = stream_bits[i]
+        if bit_id == 0:
+            signs[elem_id] = b
+        elif bit_id < 1 + e_bits:
+            # exponent bits arrive MSB-first
+            exps[elem_id] |= b << (e_bits - bit_id)
+        else:
+            mants[elem_id] |= b << (m_bits - 1 - (bit_id - 1 - e_bits))
+    return signs, exps, mants
+
+
+def stream_from_codes(codes: Sequence[int], fmt: FloatFormat) -> List[int]:
+    """Lay codes into the register stream (MSB-first per element)."""
+    bits: List[int] = []
+    for c in codes:
+        for k in range(fmt.bits - 1, -1, -1):
+            bits.append((c >> k) & 1)
+    return bits
+
+
+# ---------------------------------------------------------------------------
+# §3.3  Primitive Generator  (Code 2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Primitive:
+    oid: int  # operation (multiplication) id
+    act_id: int
+    wgt_id: int
+    act_bit: int  # j: bit of the activation mantissa
+    wgt_bit: int  # i: bit of the weight mantissa (the segment id, Fig 5)
+
+
+def capacity(ma: int, mw: int, params: PEParams = PEParams()) -> int:
+    """Number of simultaneous multiplications the PE datapath sustains."""
+    ma_, mw_ = max(ma, 1), max(mw, 1)
+    by_mant_reg = (params.r_m // ma_) * (params.r_m // mw_)
+    by_prims = params.l_prim // (ma_ * mw_)
+    return max(min(by_mant_reg, by_prims), 0)
+
+
+def primitive_schedule(
+    ma: int, mw: int, params: PEParams = PEParams()
+) -> List[Optional[Primitive]]:
+    """Leaf assignment for the FBRT: which (act_bit AND wgt_bit) sits where.
+
+    Primitives of one multiplication are contiguous, ordered ascending by
+    (wgt_bit major, act_bit minor); multiplications ordered by
+    (wgt_id major, act_id minor) — the layout Fig 3 (c) shows.
+    Leaves beyond capacity stay idle (None).
+    """
+    if ma == 0 or mw == 0:
+        return [None] * params.l_prim
+    num_prims = ma * mw
+    num_acts = max(params.r_m // ma, 1)
+    cap = capacity(ma, mw, params)
+    leaves: List[Optional[Primitive]] = [None] * params.l_prim
+    for i in range(params.l_prim):
+        oid = i // num_prims
+        if oid >= cap:
+            break
+        within = i % num_prims
+        act_bit = within % ma
+        wgt_bit = within // ma
+        leaves[i] = Primitive(
+            oid=oid,
+            act_id=oid % num_acts,
+            wgt_id=oid // num_acts,
+            act_bit=act_bit,
+            wgt_bit=wgt_bit,
+        )
+    return leaves
+
+
+# ---------------------------------------------------------------------------
+# §3.4  FBRT  — tree reduction with C2/C3/A2/A3/CA/D switch modes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Partial:
+    oid: int
+    sid: int  # weight-bit segment id; -1 once segments were added together
+    lsb: int  # place value of this partial's LSB within the product
+    width: int
+    value: int
+    nprims: int  # how many primitive leaves have been merged in
+
+
+class FBRT:
+    """Flexible-Bit Reduction Tree functional model.
+
+    Built once per (mantissa-width pair); executes on mantissa registers and
+    returns all completed products.  Switch-mode usage is recorded per level
+    (the statistics the paper's compiler/Code 3 would program).
+    """
+
+    def __init__(self, ma: int, mw: int, params: PEParams = PEParams()):
+        self.ma, self.mw, self.params = ma, mw, params
+        self.schedule = primitive_schedule(ma, mw, params)
+        self.capacity = capacity(ma, mw, params)
+        self.num_levels = max(1, math.ceil(math.log2(max(params.l_prim, 2))))
+        self.mode_counts: Counter = Counter()
+        self.completion_levels: Dict[int, int] = {}
+
+    # -- node operations --------------------------------------------------
+    def _combine(self, lo: _Partial, hi: _Partial) -> Tuple[_Partial, str]:
+        """Merge two partials of the same oid. Returns (merged, op_kind)."""
+        assert lo.oid == hi.oid
+        if lo.lsb > hi.lsb:
+            lo, hi = hi, lo
+        new_lsb = lo.lsb
+        shift = hi.lsb - new_lsb
+        value = lo.value + (hi.value << shift)
+        width = max(lo.width, shift + hi.width)
+        is_concat = (
+            lo.sid == hi.sid and lo.sid >= 0 and shift == lo.width
+        )  # adjacent bits of one segment: pure routing, no adder
+        sid = lo.sid if is_concat else -1
+        merged = _Partial(lo.oid, sid, new_lsb, width, value, lo.nprims + hi.nprims)
+        return merged, ("concat" if is_concat else "add")
+
+    def _merge_list(self, items: List[_Partial], level: int, had_neighbor: bool) -> List[_Partial]:
+        """One tree node: merge every same-oid run in its input bundle."""
+        out: List[_Partial] = []
+        for it in items:
+            merged_this_round = 0
+            while out and out[-1].oid == it.oid:
+                prev = out.pop()
+                it, kind = self._combine(prev, it)
+                merged_this_round += 1
+                # mode accounting (Fig 4): 2-input vs 3-input variants
+                if merged_this_round == 1:
+                    self.mode_counts["C2" if kind == "concat" else "A2"] += 1
+                else:
+                    key = "C3" if kind == "concat" else ("CA" if merged_this_round == 2 else "A3")
+                    self.mode_counts[key] += 1
+            out.append(it)
+        return out
+
+    # -- execution ---------------------------------------------------------
+    def __call__(
+        self, act_mantissas: Sequence[int], wgt_mantissas: Sequence[int]
+    ) -> Dict[int, int]:
+        """Run the tree. Returns {oid: mantissa product (no implicit 1s)}."""
+        self.mode_counts = Counter()
+        self.completion_levels = {}
+        total = self.ma * self.mw
+
+        # level 0: primitive leaves (cross-product ANDs)
+        nodes: List[List[_Partial]] = []
+        for prim in self.schedule:
+            if prim is None:
+                nodes.append([])
+                continue
+            a = (act_mantissas[prim.act_id] >> prim.act_bit) & 1
+            w = (wgt_mantissas[prim.wgt_id] >> prim.wgt_bit) & 1
+            nodes.append(
+                [
+                    _Partial(
+                        oid=prim.oid,
+                        sid=prim.wgt_bit,
+                        lsb=prim.act_bit + prim.wgt_bit,
+                        width=1,
+                        value=a & w,
+                        nprims=1,
+                    )
+                ]
+            )
+
+        outputs: Dict[int, int] = {}
+        level = 0
+        while len(nodes) > 1:
+            level += 1
+            # additional links: move a boundary-straddling partial sideways
+            # (Distribute mode) between adjacent nodes with different parents
+            for k in range(len(nodes) - 1):
+                if k % 2 == 0:
+                    continue  # k and k+1 share a parent: no additional link
+                left, right = nodes[k], nodes[k + 1]
+                if left and right and left[-1].oid == right[0].oid:
+                    right.insert(0, left.pop())
+                    self.mode_counts["D"] += 1
+            # parent nodes merge their two children's bundles
+            next_nodes: List[List[_Partial]] = []
+            for k in range(0, len(nodes), 2):
+                bundle = nodes[k] + (nodes[k + 1] if k + 1 < len(nodes) else [])
+                merged = self._merge_list(bundle, level, False)
+                kept: List[_Partial] = []
+                for p in merged:
+                    if p.nprims == total:  # op complete: exits the tree here
+                        outputs[p.oid] = p.value << p.lsb if p.lsb >= 0 else p.value
+                        self.completion_levels[p.oid] = level
+                    else:
+                        kept.append(p)
+                next_nodes.append(kept)
+            nodes = next_nodes
+        for p in nodes[0] if nodes else []:
+            if p.nprims == total:
+                outputs[p.oid] = p.value << p.lsb
+                self.completion_levels[p.oid] = level
+        return outputs
+
+
+# ---------------------------------------------------------------------------
+# §3.4  Implicit-1 handling (Fig 5)
+# ---------------------------------------------------------------------------
+
+
+def with_implicit_ones(
+    p_fbrt: int,
+    a_mant: int,
+    w_mant: int,
+    ma: int,
+    mw: int,
+    a_normal: bool = True,
+    w_normal: bool = True,
+) -> int:
+    """(a_n·2^Ma + A)(w_n·2^Mw + W) from the FBRT partial product A·W.
+
+    Step 1 (Fig 5): add the original weight, shifted — the implicit 1 of the
+    activation times W.  Step 2: same for the activation.  Finally the
+    always-1 primitive 2^(Ma+Mw) when both operands are normal.
+    """
+    v = p_fbrt
+    if a_normal:
+        v += w_mant << ma
+    if w_normal:
+        v += a_mant << mw
+    if a_normal and w_normal:
+        v += 1 << (ma + mw)
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Full PE multiplication pipeline
+# ---------------------------------------------------------------------------
+
+
+def flexibit_multiply(
+    codes_a: Sequence[int],
+    codes_w: Sequence[int],
+    fmt_a: FloatFormat,
+    fmt_w: FloatFormat,
+    params: PEParams = PEParams(),
+) -> List[Tuple[int, int, int, int, int]]:
+    """Multiply packed registers of FP codes, bit-exactly, through the full
+    emulated datapath.  Returns per output op ``(ai, wi, sign, sig, exp2)``
+    meaning codes_a[ai] * codes_w[wi] = (-1)^sign * sig * 2^exp2 — exact,
+    unrounded (what the paper calls e.g. "FP20 results" for FP6 x FP16).
+    """
+    from .fbea import exponent_sum  # deferred: fbea imports nothing from here
+
+    ma, mw = fmt_a.man_bits, fmt_w.man_bits
+    n_a = params.reg_width // fmt_a.bits
+    n_w = params.reg_width // fmt_w.bits
+
+    sa, ea, mas = separate(stream_from_codes(codes_a, fmt_a), fmt_a, params)
+    sw, ew, mws = separate(stream_from_codes(codes_w, fmt_w), fmt_w, params)
+
+    # the schedule addresses mantissa lanes [0, R_M // M); lanes beyond the
+    # operand registers are idle (zero) in hardware
+    num_acts = max(params.r_m // max(ma, 1), 1)
+    num_wgts = max(params.r_m // max(mw, 1), 1)
+    mas_l = (mas + [0] * num_acts)[:num_acts]
+    mws_l = (mws + [0] * num_wgts)[:num_wgts]
+
+    tree = FBRT(ma, mw, params)
+    prods = tree(mas_l, mws_l) if ma and mw else {}
+
+    # valid simultaneous ops: both operands exist in their registers AND the
+    # (act, wgt) lane pair is addressable by the schedule, AND within the
+    # tree's capacity
+    a_lanes = min(n_a, num_acts)
+    w_lanes = min(n_w, num_wgts)
+    results: List[Tuple[int, int, int, int, int]] = []
+    for wi in range(w_lanes):
+        for ai in range(a_lanes):
+            oid = wi * num_acts + ai
+            if ma and mw and oid not in prods and oid >= tree.capacity:
+                continue
+            a_normal = ea[ai] != 0
+            w_normal = ew[wi] != 0
+            p = prods.get(oid, 0)
+            sig = with_implicit_ones(p, mas[ai], mws[wi], ma, mw, a_normal, w_normal)
+            # FBEA: exponent sum with bias handling; subnormals use e = 1
+            e_a = ea[ai] if a_normal else 1
+            e_w = ew[wi] if w_normal else 1
+            exp = exponent_sum(e_a, e_w, fmt_a, fmt_w)
+            # significand is an integer scaled by 2^-(Ma+Mw)
+            results.append((ai, wi, sa[ai] ^ sw[wi], sig, exp - ma - mw))
+    return results
+
+
+# ---------------------------------------------------------------------------
+# PE throughput (consumed by the performance model)
+# ---------------------------------------------------------------------------
+
+
+def ops_per_cycle(fmt_a, fmt_w, params: PEParams = PEParams()) -> int:
+    """Simultaneous MACs per PE per cycle for an (act fmt, wgt fmt) pair.
+
+    Three structural limits (all visible in the walk-through of Fig 3):
+      1. reg_width bits of packed operands per register,
+      2. R_M bits of separated mantissas,
+      3. L_prim leaf slots in the primitive generator / FBRT.
+    """
+    pa = fmt_a.bits
+    pw = fmt_w.bits
+    ma = getattr(fmt_a, "man_bits", None)
+    mw = getattr(fmt_w, "man_bits", None)
+    if ma is None:  # IntFormat: the full magnitude is the "mantissa"
+        ma = fmt_a.bits - 1
+    if mw is None:
+        mw = fmt_w.bits - 1
+    by_reg = (params.reg_width // pa) * (params.reg_width // pw)
+    return max(min(by_reg, capacity(ma, mw, params)), 1)

@@ -1,0 +1,166 @@
+"""Arbitrary-precision GEMM: the public compute API of the FlexiBit library.
+
+A ``QTensor`` is the software analogue of FlexiBit's packed SRAM contents:
+integer codes of an arbitrary ``ExMy``/``INTb`` format, bit-packed with no
+padding (`core.bitpack`), plus optional per-channel or per-block (MX) scales.
+
+``matmul(x, qt)`` multiplies activations kept in a wide dtype (bf16/f32 —
+matching the paper's FP16-activation x low-precision-weight regime) against
+packed weights.  Two execution paths:
+
+* reference path (this module): unpack -> decode -> scale -> dot, pure jnp.
+  This is the oracle and the CPU-friendly path used by tests and smoke runs.
+* kernel path (`repro.kernels.packed_matmul`): a Pallas TPU kernel that
+  performs the unpack+decode *inside* VMEM tiles and feeds the MXU directly —
+  the TPU-native realization of FlexiBit's "no up-cast in memory" insight.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import bitpack
+from .formats import (
+    BlockScaleSpec,
+    FloatFormat,
+    Format,
+    IntFormat,
+    apply_block_scale,
+    compute_block_scales,
+    decode,
+    encode,
+    parse_format,
+)
+
+__all__ = ["QTensor", "quantize_tensor", "dequantize", "matmul", "memory_bits"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """Bit-packed quantized tensor; codes packed along the last axis into
+    uint32 words.  The *logical* shape is derived from the packed leaf, so
+    slicing the pytree (e.g. `lax.scan` over a layer stack) keeps metadata
+    consistent automatically."""
+
+    packed: jax.Array  # uint32 (*leading, N * bits // 32)
+    scales: Optional[jax.Array]  # None | (*lead, N) | (*lead, K/block, N)
+    fmt: Format
+    scale_mode: str  # 'none' | 'channel' | 'block'
+    block: int  # block size along axis -2 when scale_mode == 'block'
+
+    def tree_flatten(self):
+        children = (self.packed, self.scales)
+        aux = (self.fmt, self.scale_mode, self.block)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, scales = children
+        fmt, scale_mode, block = aux
+        return cls(packed, scales, fmt, scale_mode, block)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        n = self.packed.shape[-1] * 32 // self.fmt.bits
+        return tuple(self.packed.shape[:-1]) + (n,)
+
+    @property
+    def bits(self) -> int:
+        return self.fmt.bits
+
+    def memory_bits(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        scale_bits = 0
+        if self.scales is not None:
+            s = 1
+            for d in self.scales.shape:
+                s *= d
+            scale_bits = s * (8 if self.scale_mode == "block" else 32)
+        return n * self.fmt.bits + scale_bits
+
+
+def memory_bits(qt: QTensor) -> int:
+    return qt.memory_bits()
+
+
+def quantize_tensor(
+    w: jax.Array,
+    fmt,
+    scale_mode: str = "none",
+    block: int = 32,
+    scale_kind: str = "e8m0",
+) -> QTensor:
+    """Quantize a weight matrix/tensor into a packed QTensor.
+
+    scale_mode:
+      'none'    — codes store values directly (paper's plain FPb pipeline).
+      'channel' — one f32 scale per output channel (last axis). Required for
+                  INT formats; optional range-fitting for FP.
+      'block'   — MX-style: one scale per `block` elements along axis -2
+                  (the reduction axis of ``x @ w``), shared-exponent e8m0 by
+                  default (paper §2.1 / §3.9).
+    """
+    fmt = parse_format(fmt)
+    w = w.astype(jnp.float32)
+    scales = None
+    if scale_mode == "none":
+        if isinstance(fmt, IntFormat):
+            raise ValueError("INT formats need a scale ('channel' or 'block')")
+        x = w
+    elif scale_mode == "channel":
+        # one scale per output channel, per leading (e.g. layer-stack) index:
+        # shape[:-2] + (N,) — reduction happens over axis -2 only
+        target = fmt.maxval if isinstance(fmt, FloatFormat) else float(fmt.qmax)
+        amax = jnp.max(jnp.abs(w), axis=-2)
+        scales = jnp.where(amax == 0, 1.0, amax / target)
+        x = w / scales[..., None, :]
+    elif scale_mode == "block":
+        spec = BlockScaleSpec(block, scale_kind)
+        scales = compute_block_scales(w, fmt, spec, axis=-2)
+        x = apply_block_scale(w, scales, spec, axis=-2, inverse=False)
+    else:
+        raise ValueError(f"bad scale_mode {scale_mode}")
+    codes = encode(x, fmt)
+    packed = bitpack.pack_codes(codes, fmt.bits)
+    return QTensor(packed, scales, fmt, scale_mode, block)
+
+
+def dequantize(qt: QTensor, dtype=jnp.float32) -> jax.Array:
+    """Exact reconstruction of the values a FlexiBit PE would compute on."""
+    n = qt.shape[-1]
+    codes = bitpack.unpack_codes(qt.packed, qt.fmt.bits, n)
+    codes = codes.reshape(qt.shape)
+    vals = decode(codes, qt.fmt, dtype=jnp.float32)
+    if qt.scale_mode == "channel":
+        vals = vals * qt.scales[..., None, :]
+    elif qt.scale_mode == "block":
+        spec = BlockScaleSpec(qt.block)
+        vals = apply_block_scale(vals, qt.scales, spec, axis=-2, inverse=True)
+    return vals.astype(dtype)
+
+
+def matmul(
+    x: jax.Array,
+    qt: QTensor,
+    *,
+    use_kernel: bool = False,
+    interpret: bool = True,
+    preferred_dtype=jnp.float32,
+) -> jax.Array:
+    """x @ W for packed W.  x: (..., K); qt logical (K, N)."""
+    if len(qt.shape) != 2:
+        raise ValueError("matmul expects a 2-D QTensor")
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.packed_matmul(x, qt, interpret=interpret,
+                                        preferred_dtype=preferred_dtype)
+    w = dequantize(qt, dtype=preferred_dtype)
+    return jnp.matmul(x.astype(preferred_dtype), w).astype(x.dtype)

@@ -1,0 +1,410 @@
+"""Arbitrary-precision number formats (the data types FlexiBit computes on).
+
+FlexiBit's premise is that the *format* is a free parameter: any ``ExMy``
+floating-point layout (sign | E exponent bits | M mantissa bits), any INTb,
+and Micro-Scaling (MX) block formats.  This module is the software codec for
+those formats: encode f32 tensors into integer *codes* (bit patterns) and
+decode codes back, exactly, entirely in JAX.
+
+Conventions
+-----------
+* FP codes are ``sign | exponent | mantissa`` (MSB..LSB), bias = 2^(E-1)-1.
+* Quantization formats saturate: the top exponent code is an ordinary normal
+  binade (no inf/nan), matching FP8-E4M3/FP6/FP5/FP4 practice in the paper's
+  references [31, 34, 50].  ``ieee_specials=True`` reserves the top exponent
+  for inf/nan (used for e5m10=fp16, e8m7=bf16 interop).
+* Subnormals are kept (value = m * 2^(1-bias-M)), as FP6-LLM does.
+* INT codes are stored offset-binary (code = q + 2^(b-1)) so every code is an
+  unsigned bit pattern ready for bit-packing.
+* Rounding is round-to-nearest-even everywhere.
+
+Everything here is shape-polymorphic and jit-friendly; no Python loops over
+elements.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FloatFormat",
+    "IntFormat",
+    "Format",
+    "BlockScaleSpec",
+    "parse_format",
+    "encode",
+    "decode",
+    "quantize",
+    "fake_quant",
+    "FP4_E2M1",
+    "FP5_E2M2",
+    "FP6_E2M3",
+    "FP6_E3M2",
+    "FP8_E4M3",
+    "FP8_E5M2",
+    "FP16",
+    "BF16",
+    "INT4",
+    "INT8",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatFormat:
+    """An arbitrary ExMy floating-point format. Total bits = 1 + E + M."""
+
+    exp_bits: int
+    man_bits: int
+    ieee_specials: bool = False
+
+    def __post_init__(self):
+        if not (1 <= self.exp_bits <= 8):
+            raise ValueError(f"exp_bits must be in [1, 8], got {self.exp_bits}")
+        if not (0 <= self.man_bits <= 23):
+            raise ValueError(f"man_bits must be in [0, 23], got {self.man_bits}")
+        if self.exp_bits == 8 and not self.ieee_specials:
+            # top binade of a saturating E8 format exceeds f32 range
+            object.__setattr__(self, "ieee_specials", True)
+
+    # -- derived ---------------------------------------------------------
+    @property
+    def bits(self) -> int:
+        return 1 + self.exp_bits + self.man_bits
+
+    @property
+    def bias(self) -> int:
+        return 2 ** (self.exp_bits - 1) - 1
+
+    @property
+    def max_biased_exp(self) -> int:
+        top = 2**self.exp_bits - 1
+        return top - 1 if self.ieee_specials else top
+
+    @property
+    def max_unbiased_exp(self) -> int:
+        return self.max_biased_exp - self.bias
+
+    @property
+    def min_unbiased_exp(self) -> int:
+        """Exponent of the smallest *normal* binade."""
+        return 1 - self.bias
+
+    @property
+    def maxval(self) -> float:
+        return float(2.0 ** self.max_unbiased_exp * (2.0 - 2.0 ** -self.man_bits))
+
+    @property
+    def name(self) -> str:
+        return f"e{self.exp_bits}m{self.man_bits}"
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return self.name
+
+
+@dataclasses.dataclass(frozen=True)
+class IntFormat:
+    """Signed two's-complement INTb; codes stored offset-binary."""
+
+    bits: int
+
+    def __post_init__(self):
+        if not (2 <= self.bits <= 16):
+            raise ValueError(f"int bits must be in [2, 16], got {self.bits}")
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    @property
+    def name(self) -> str:
+        return f"int{self.bits}"
+
+    def __str__(self) -> str:  # pragma: no cover
+        return self.name
+
+
+Format = Union[FloatFormat, IntFormat]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockScaleSpec:
+    """Block scaling à la Micro-Scaling (MX) [Rouhani et al. 2023].
+
+    ``block`` contiguous elements along the reduction axis share one scale.
+    ``e8m0`` scales are pure powers of two (stored as uint8 biased exponent),
+    ``f32``/``f16`` are ordinary float scales (per-channel INT quantization
+    uses ``block=None`` semantics via block == axis length).
+    """
+
+    block: int
+    scale_kind: str = "e8m0"  # 'e8m0' | 'f32' | 'f16'
+
+    def __post_init__(self):
+        if self.scale_kind not in ("e8m0", "f32", "f16"):
+            raise ValueError(f"bad scale_kind {self.scale_kind}")
+        if self.block < 1:
+            raise ValueError("block must be >= 1")
+
+
+_FMT_RE = re.compile(r"^e(\d+)m(\d+)$")
+_INT_RE = re.compile(r"^int(\d+)$")
+
+
+def parse_format(s: Union[str, Format]) -> Format:
+    """'e3m2' -> FloatFormat(3, 2); 'int4' -> IntFormat(4); idempotent."""
+    if isinstance(s, (FloatFormat, IntFormat)):
+        return s
+    s = s.lower().strip()
+    if s in ("fp16", "f16", "float16"):
+        return FP16
+    if s in ("bf16", "bfloat16"):
+        return BF16
+    m = _FMT_RE.match(s)
+    if m:
+        return FloatFormat(int(m.group(1)), int(m.group(2)))
+    m = _INT_RE.match(s)
+    if m:
+        return IntFormat(int(m.group(1)))
+    raise ValueError(f"cannot parse format {s!r}")
+
+
+# ---------------------------------------------------------------------------
+# FP encode / decode
+# ---------------------------------------------------------------------------
+
+
+def _encode_e8(x: jax.Array, fmt: FloatFormat) -> jax.Array:
+    """E=8 formats share f32's bias (127): exact integer bit-field codec.
+
+    Needed because XLA:CPU flushes subnormal float results to zero, and E=8
+    subnormals (e.g. bf16's 2^-133) live below f32's normal range.  Integer
+    arithmetic sidesteps FTZ entirely; rounding is the classic carry-across-
+    exponent RNE trick (as used in f32->bf16 conversion).
+    """
+    u = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    sign = u >> 31
+    mag = u & jnp.uint32(0x7FFFFFFF)
+    is_nan = mag > jnp.uint32(0x7F800000)
+    is_inf = mag == jnp.uint32(0x7F800000)
+    shift = 23 - fmt.man_bits
+    if shift > 0:
+        rnd = ((mag >> shift) & jnp.uint32(1)) + jnp.uint32((1 << (shift - 1)) - 1)
+        mag2 = (mag + rnd) >> shift
+    else:
+        mag2 = mag
+    inf_mag = jnp.uint32(0xFF << fmt.man_bits)
+    mag2 = jnp.minimum(mag2, inf_mag)  # rounding overflow -> inf (IEEE)
+    mag2 = jnp.where(is_inf, inf_mag, mag2)
+    nan_mag = inf_mag | jnp.uint32(max(1, 1 << max(fmt.man_bits - 1, 0)))
+    mag2 = jnp.where(is_nan, nan_mag, mag2)
+    return (sign << (8 + fmt.man_bits)) | mag2
+
+
+def _decode_e8(code: jax.Array, fmt: FloatFormat, dtype=jnp.float32) -> jax.Array:
+    code = code.astype(jnp.uint32)
+    sign = (code >> (8 + fmt.man_bits)) & jnp.uint32(1)
+    mag = code & jnp.uint32((1 << (8 + fmt.man_bits)) - 1)
+    u = (sign << 31) | (mag << (23 - fmt.man_bits))
+    return jax.lax.bitcast_convert_type(u, jnp.float32).astype(dtype)
+
+
+def _encode_float(x: jax.Array, fmt: FloatFormat) -> jax.Array:
+    """f32 array -> uint32 codes. Saturating, RNE, keeps subnormals."""
+    if fmt.exp_bits == 8:
+        return _encode_e8(x, fmt)
+    x = x.astype(jnp.float32)
+    sign = jnp.signbit(x)
+    a = jnp.abs(x)
+    if fmt.ieee_specials:
+        is_nan = jnp.isnan(a)
+        is_inf = jnp.isinf(a)
+        a = jnp.where(is_nan | is_inf, 0.0, a)
+    a = jnp.minimum(a, jnp.float32(fmt.maxval))
+
+    # a = m * 2^e with m in [0.5, 1)  (frexp(0) == (0, 0))
+    _, e = jnp.frexp(a)
+    ue = jnp.maximum(e - 1, fmt.min_unbiased_exp)  # unbiased exponent (clamped
+    # up to the subnormal binade so subnormal quantization falls out naturally)
+    # integer significand on a 2^(ue - M) grid; exact: power-of-two scaling.
+    # |k| can exceed the f32 exponent range (e.g. bf16 subnormals need 2^133),
+    # so apply the scale as two half-sized exact power-of-two multiplies.
+    k = fmt.man_bits - ue
+    k1 = k // 2
+    q = jnp.round(
+        a * jnp.exp2(k1.astype(jnp.float32)) * jnp.exp2((k - k1).astype(jnp.float32))
+    )
+    q = q.astype(jnp.uint32)
+    # rounding may carry into the next binade: q == 2^(M+1)
+    carry = q >= jnp.uint32(2 ** (fmt.man_bits + 1))
+    q = jnp.where(carry, jnp.uint32(2**fmt.man_bits), q)
+    ue = jnp.where(carry, ue + 1, ue)
+
+    is_normal = q >= jnp.uint32(2**fmt.man_bits)
+    exp_field = jnp.where(is_normal, (ue + fmt.bias).astype(jnp.uint32), jnp.uint32(0))
+    man_field = jnp.where(is_normal, q - jnp.uint32(2**fmt.man_bits), q)
+    code = (
+        (sign.astype(jnp.uint32) << (fmt.exp_bits + fmt.man_bits))
+        | (exp_field << fmt.man_bits)
+        | man_field
+    )
+    if fmt.ieee_specials:
+        top = jnp.uint32(2**fmt.exp_bits - 1)
+        inf_code = (sign.astype(jnp.uint32) << (fmt.exp_bits + fmt.man_bits)) | (
+            top << fmt.man_bits
+        )
+        nan_code = inf_code | jnp.uint32(max(1, 2 ** max(fmt.man_bits - 1, 0)))
+        code = jnp.where(is_inf, inf_code, code)
+        code = jnp.where(is_nan, nan_code, code)
+    return code
+
+
+def _decode_float(code: jax.Array, fmt: FloatFormat, dtype=jnp.float32) -> jax.Array:
+    if fmt.exp_bits == 8:
+        return _decode_e8(code, fmt, dtype)
+    code = code.astype(jnp.uint32)
+    e_mask = jnp.uint32(2**fmt.exp_bits - 1)
+    m_mask = jnp.uint32(2**fmt.man_bits - 1)
+    sign = (code >> (fmt.exp_bits + fmt.man_bits)) & jnp.uint32(1)
+    ef = (code >> fmt.man_bits) & e_mask
+    mf = code & m_mask
+
+    is_sub = ef == 0
+    # normal: (2^M + mf) * 2^(ef - bias - M); subnormal: mf * 2^(1 - bias - M)
+    sig = jnp.where(is_sub, mf, mf + jnp.uint32(2**fmt.man_bits)).astype(jnp.float32)
+    exp = jnp.where(is_sub, 1, ef.astype(jnp.int32)) - (fmt.bias + fmt.man_bits)
+    # split the power-of-two scale: exp can be as low as -133 (bf16 subnormals)
+    # and XLA's exp2 flushes subnormal outputs to zero.
+    e1 = exp // 2
+    val = sig * jnp.exp2(e1.astype(jnp.float32)) * jnp.exp2((exp - e1).astype(jnp.float32))
+    val = jnp.where(sign == 1, -val, val)
+    if fmt.ieee_specials:
+        is_top = ef == jnp.uint32(2**fmt.exp_bits - 1)
+        inf = jnp.where(sign == 1, -jnp.inf, jnp.inf).astype(jnp.float32)
+        val = jnp.where(is_top & (mf == 0), inf, val)
+        val = jnp.where(is_top & (mf != 0), jnp.nan, val)
+    return val.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# INT encode / decode  (scale handled by caller / QTensor layer)
+# ---------------------------------------------------------------------------
+
+
+def _encode_int(x: jax.Array, fmt: IntFormat) -> jax.Array:
+    """f32 (already divided by scale) -> offset-binary uint32 codes."""
+    q = jnp.clip(jnp.round(x.astype(jnp.float32)), fmt.qmin, fmt.qmax)
+    return (q.astype(jnp.int32) + 2 ** (fmt.bits - 1)).astype(jnp.uint32)
+
+
+def _decode_int(code: jax.Array, fmt: IntFormat, dtype=jnp.float32) -> jax.Array:
+    q = code.astype(jnp.int32) - 2 ** (fmt.bits - 1)
+    return q.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+def encode(x: jax.Array, fmt: Format) -> jax.Array:
+    """Quantize float values into integer codes (bit patterns) of ``fmt``."""
+    fmt = parse_format(fmt)
+    if isinstance(fmt, FloatFormat):
+        return _encode_float(x, fmt)
+    return _encode_int(x, fmt)
+
+
+def decode(code: jax.Array, fmt: Format, dtype=jnp.float32) -> jax.Array:
+    """Exactly reconstruct the float value represented by each code."""
+    fmt = parse_format(fmt)
+    if isinstance(fmt, FloatFormat):
+        return _decode_float(code, fmt, dtype)
+    return _decode_int(code, fmt, dtype)
+
+
+def quantize(x: jax.Array, fmt: Format) -> jax.Array:
+    """Round-trip x through ``fmt`` (no scale). decode(encode(x))."""
+    return decode(encode(x, fmt), fmt, dtype=x.dtype)
+
+
+@jax.custom_jvp
+def fake_quant(x: jax.Array, exp_bits: int, man_bits: int) -> jax.Array:
+    """Straight-through fake quantization for QAT (FloatFormat only)."""
+    return quantize(x, FloatFormat(int(exp_bits), int(man_bits)))
+
+
+@fake_quant.defjvp
+def _fake_quant_jvp(primals, tangents):
+    x, e, m = primals
+    dx, _, _ = tangents
+    return fake_quant(x, e, m), dx  # straight-through estimator
+
+
+# ---------------------------------------------------------------------------
+# Block scales (MX)
+# ---------------------------------------------------------------------------
+
+
+def compute_block_scales(
+    x: jax.Array, fmt: Format, spec: BlockScaleSpec, axis: int = -1
+) -> jax.Array:
+    """Per-block scale so the max-|x| element maps to the format's max code.
+
+    Returns scales with the blocked axis reduced: shape[axis] /= block.
+    For e8m0 scales the result is a power of two (MX semantics).
+    """
+    fmt = parse_format(fmt)
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    if n % spec.block != 0:
+        raise ValueError(f"axis len {n} not divisible by block {spec.block}")
+    xs = jnp.moveaxis(x, axis, -1)
+    xs = xs.reshape(xs.shape[:-1] + (n // spec.block, spec.block))
+    amax = jnp.max(jnp.abs(xs.astype(jnp.float32)), axis=-1)
+    target = fmt.maxval if isinstance(fmt, FloatFormat) else float(fmt.qmax)
+    scale = amax / target
+    scale = jnp.where(amax == 0.0, 1.0, scale)
+    if spec.scale_kind == "e8m0":
+        # round scale *up* to a power of two so no element saturates
+        scale = jnp.exp2(jnp.ceil(jnp.log2(scale)))
+        scale = jnp.where(jnp.isfinite(scale), scale, 1.0)
+    elif spec.scale_kind == "f16":
+        scale = scale.astype(jnp.float16).astype(jnp.float32)
+    out = scale
+    out = jnp.moveaxis(out, -1, axis)
+    return out
+
+
+def apply_block_scale(
+    x: jax.Array, scales: jax.Array, spec: BlockScaleSpec, axis: int, inverse: bool
+) -> jax.Array:
+    """Divide (inverse=False) or multiply (inverse=True) x by its block scale."""
+    axis = axis % x.ndim
+    rep = jnp.repeat(scales, spec.block, axis=axis)
+    return x * rep if inverse else x / rep
+
+
+# ---------------------------------------------------------------------------
+# common formats
+# ---------------------------------------------------------------------------
+
+FP4_E2M1 = FloatFormat(2, 1)
+FP5_E2M2 = FloatFormat(2, 2)
+FP6_E2M3 = FloatFormat(2, 3)
+FP6_E3M2 = FloatFormat(3, 2)
+FP8_E4M3 = FloatFormat(4, 3)
+FP8_E5M2 = FloatFormat(5, 2)
+FP16 = FloatFormat(5, 10, ieee_specials=True)
+BF16 = FloatFormat(8, 7, ieee_specials=True)
+INT4 = IntFormat(4)
+INT8 = IntFormat(8)

@@ -1,0 +1,98 @@
+"""Deterministic, shardable data pipeline.
+
+* `SyntheticLM` — seeded synthetic token streams: batch for (step, shard)
+  is a pure function of (seed, step, shard) — restart-safe and identical
+  regardless of how many hosts participate (each host materializes only
+  its shard).
+* `PackedCorpus` — file-backed tokenized corpus (memmapped .npy), packed
+  into (B, S) blocks with deterministic shuffling; same shard semantics.
+* `Prefetcher` — background-thread double buffering.
+"""
+
+from __future__ import annotations
+
+import threading
+import queue
+from pathlib import Path
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+class SyntheticLM:
+    def __init__(self, vocab_size: int, seq_len: int, global_batch: int,
+                 seed: int = 0, num_shards: int = 1, shard: int = 0):
+        assert global_batch % num_shards == 0
+        self.vocab = vocab_size
+        self.seq = seq_len
+        self.local_batch = global_batch // num_shards
+        self.seed = seed
+        self.num_shards = num_shards
+        self.shard = shard
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.Generator(np.random.Philox(
+            key=self.seed, counter=[step, self.shard, 0, 0]))
+        toks = rng.integers(0, self.vocab,
+                            size=(self.local_batch, self.seq + 1),
+                            dtype=np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class PackedCorpus:
+    """Tokenized corpus -> packed (B, S) LM batches, deterministic order."""
+
+    def __init__(self, path, seq_len: int, global_batch: int, seed: int = 0,
+                 num_shards: int = 1, shard: int = 0):
+        self.tokens = np.load(path, mmap_mode="r")
+        self.seq = seq_len
+        assert global_batch % num_shards == 0
+        self.local_batch = global_batch // num_shards
+        self.num_shards = num_shards
+        self.shard = shard
+        n_blocks = (len(self.tokens) - 1) // seq_len
+        rng = np.random.default_rng(seed)
+        self.order = rng.permutation(n_blocks)
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        n = len(self.order)
+        toks, labs = [], []
+        for i in range(self.local_batch):
+            gidx = (step * self.local_batch * self.num_shards
+                    + self.shard * self.local_batch + i) % n
+            b = self.order[gidx] * self.seq
+            toks.append(self.tokens[b : b + self.seq])
+            labs.append(self.tokens[b + 1 : b + self.seq + 1])
+        return {"tokens": np.stack(toks).astype(np.int32),
+                "labels": np.stack(labs).astype(np.int32)}
+
+
+class Prefetcher:
+    def __init__(self, source, depth: int = 2):
+        self.source = source
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._step = 0
+        self._thread.start()
+
+    def _work(self):
+        step = 0
+        while not self._stop.is_set():
+            try:
+                self.q.put(self.source.batch(step), timeout=0.5)
+                step += 1
+            except queue.Full:
+                continue
+
+    def next(self):
+        return self.q.get()
+
+    def close(self):
+        self._stop.set()

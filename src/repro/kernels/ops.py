@@ -1,0 +1,76 @@
+"""jit'd public wrapper around the packed matmul kernel.
+
+Handles: QTensor plumbing, padding to MXU-aligned block sizes, block-size
+selection for small shapes, batch dims, and the interpret (CPU validation)
+vs compiled (TPU) switch.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flexgemm import QTensor
+from repro.core import bitpack
+from .packed_matmul import packed_matmul_pallas
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest power-of-two block <= preferred that divides dim (>= 8)."""
+    b = preferred
+    while b > 8 and dim % b != 0:
+        b //= 2
+    return max(b, 8) if dim % max(b, 8) == 0 else dim
+
+
+def packed_matmul(
+    x: jax.Array,
+    qt: QTensor,
+    *,
+    interpret: bool = True,
+    preferred_dtype=jnp.float32,
+    block_m: int = 128,
+    block_n: int = 256,
+    block_k: int = 128,
+) -> jax.Array:
+    """x (..., K) @ qt (K, N) -> (..., N), via the Pallas kernel."""
+    K, N = qt.shape
+    lead = x.shape[:-1]
+    M = 1
+    for d in lead:
+        M *= d
+    x2 = x.reshape(M, K)
+
+    bits = qt.fmt.bits
+    g = bitpack.group_size(bits)
+    # block_n must be a multiple of the packing group so tiles align to words
+    bn = max((_pick_block(N, block_n) // g) * g, g)
+    if N % bn != 0:
+        bn = g  # worst case: one group per tile (still word-aligned)
+    bm = _pick_block(M, block_m)
+    bk = _pick_block(K, block_k)
+    if qt.scale_mode == "block":
+        # K tiles must cover whole scale blocks
+        bk = max((bk // qt.block) * qt.block, qt.block)
+
+    pad_m = (-M) % bm
+    if pad_m:
+        x2 = jnp.pad(x2, ((0, pad_m), (0, 0)))
+
+    out = packed_matmul_pallas(
+        x2,
+        qt.packed,
+        qt.scales,
+        fmt_name=qt.fmt.name,
+        scale_mode=qt.scale_mode,
+        scale_block=qt.block,
+        block_m=bm,
+        block_n=bn,
+        block_k=bk,
+        interpret=interpret,
+    )
+    if pad_m:
+        out = out[:M]
+    return out.reshape(*lead, N).astype(preferred_dtype)

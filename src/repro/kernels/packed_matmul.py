@@ -1,0 +1,190 @@
+"""Pallas TPU kernel: bit-packed arbitrary-precision dequant-fused matmul.
+
+This is the TPU-native realization of FlexiBit's core insight.  The paper's
+FBRT is a *circuit* that multiplies arbitrary-width mantissas bit-parallel
+with zero padding waste; a TPU's MXU is a fixed-function bf16/f32 systolic
+array, so the circuit itself does not transfer.  What transfers is the
+*system-level* win the circuit enables: weights live in HBM (and move over
+the network) at their true bit width — FP6 costs 6 bits, FP5 costs 5 — and
+are expanded to MXU operand precision only transiently, inside VMEM, fused
+into the matmul.  No padded up-cast copy ever exists in HBM.
+
+Layout (see `repro.core.bitpack`): codes packed little-endian along N into
+uint32 words in groups of g = lcm(bits,32)/bits codes; a (bk, bn) logical
+weight tile is a contiguous (bk, bn*bits/32) uint32 tile, so BlockSpec
+tiling composes with the packing scheme with no gathers.
+
+Grid: (M/bm, N/bn, K/bk), K innermost; the f32 output tile is revisited
+across K steps and accumulated in place (standard Pallas TPU matmul
+pattern), MXU-aligned block shapes (multiples of 128 where possible).
+
+Supported element formats: any ExMy with E <= 8 (no inf/nan codes — these
+are saturating quantization formats), plus INTb.  Scale modes: none,
+per-output-channel f32, per-(K-block, channel) MX-style shared scales.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import bitpack
+from repro.core.formats import FloatFormat, IntFormat, parse_format
+
+__all__ = ["packed_matmul_pallas", "decode_codes_jnp"]
+
+
+def decode_codes_jnp(codes: jax.Array, fmt) -> jax.Array:
+    """Vectorized in-kernel decode: integer codes -> f32 values.
+
+    Pure bit manipulation + one small float multiply; identical math to
+    `core.formats.decode` but restricted to kernel-friendly ops (no frexp,
+    no where-chains over specials).
+    """
+    fmt = parse_format(fmt)
+    codes = codes.astype(jnp.uint32)
+    if isinstance(fmt, IntFormat):
+        # offset-binary -> signed
+        return codes.astype(jnp.float32) - jnp.float32(2 ** (fmt.bits - 1))
+    e, m = fmt.exp_bits, fmt.man_bits
+    sign = (codes >> (e + m)) & jnp.uint32(1)
+    ef = (codes >> m) & jnp.uint32(2**e - 1)
+    mf = codes & jnp.uint32(2**m - 1)
+    if e == 8:
+        # same bias as f32: direct field relocation (exact, incl. subnormals)
+        u = (sign << 31) | (ef << 23) | (mf << (23 - m))
+        return jax.lax.bitcast_convert_type(u, jnp.float32)
+    # normal values: rebias exponent into f32's field
+    exp32 = ef.astype(jnp.int32) - fmt.bias + 127
+    u = (sign << 31) | (exp32.astype(jnp.uint32) << 23) | (mf << (23 - m))
+    normal = jax.lax.bitcast_convert_type(u, jnp.float32)
+    # subnormals: mf * 2^(1 - bias - m)  (f32-normal for every E < 8 format)
+    sub_scale = jnp.float32(2.0 ** (fmt.min_unbiased_exp - m))
+    signf = 1.0 - 2.0 * sign.astype(jnp.float32)
+    sub = signf * mf.astype(jnp.float32) * sub_scale
+    return jnp.where(ef == 0, sub, normal)
+
+
+def _unpack_tile(wp: jax.Array, bits: int, bn: int) -> jax.Array:
+    """(bk, bn*bits/32) uint32 words -> (bk, bn) uint32 codes (static unroll)."""
+    g = bitpack.group_size(bits)
+    wpg = bitpack.words_per_group(bits)
+    bk = wp.shape[0]
+    ngroups = bn // g
+    ws = wp.reshape(bk, ngroups, wpg)
+    mask = jnp.uint32((1 << bits) - 1)
+    cols = []
+    for j in range(g):
+        lo = j * bits
+        w0, off = lo // 32, lo % 32
+        c = ws[:, :, w0] >> off
+        if off + bits > 32:
+            c = c | (ws[:, :, w0 + 1] << (32 - off))
+        cols.append(c & mask)
+    codes = jnp.stack(cols, axis=-1)  # (bk, ngroups, g)
+    return codes.reshape(bk, bn)
+
+
+def _kernel(x_ref, wp_ref, *rest, fmt, bits, bn, scale_mode, scale_block, nk):
+    """One (bm, bn) output tile; accumulates over the K grid dimension.
+
+    Ref order: inputs (x, packed_w[, scales]) then the output ref.
+    """
+    scale_refs, out_ref = rest[:-1], rest[-1]
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes = _unpack_tile(wp_ref[...], bits, bn)
+    w = decode_codes_jnp(codes, fmt)
+    if scale_mode == "block":
+        # scales: (bk // scale_block, bn) — expand along K within the tile
+        s = scale_refs[0][...]
+        w = w * jnp.repeat(s, scale_block, axis=0)
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    if scale_mode == "channel":
+        nk_last = nk - 1
+
+        @pl.when(k == nk_last)
+        def _scale():
+            out_ref[...] = out_ref[...] * scale_refs[0][...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "fmt_name", "scale_mode", "scale_block", "block_m", "block_n",
+        "block_k", "interpret",
+    ),
+)
+def packed_matmul_pallas(
+    x: jax.Array,
+    packed: jax.Array,
+    scales: Optional[jax.Array],
+    *,
+    fmt_name: str,
+    scale_mode: str = "none",
+    scale_block: int = 32,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """x (M, K) @ packed weights (logical (K, N)) -> (M, N) f32.
+
+    Shapes must already be multiples of the block sizes (ops.py pads).
+    """
+    fmt = parse_format(fmt_name)
+    bits = fmt.bits
+    M, K = x.shape
+    words_per_n = bits * block_n // 32
+    N = packed.shape[1] * 32 // bits
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0
+    nk = K // block_k
+    grid = (M // block_m, N // block_n, nk)
+
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+        pl.BlockSpec((block_k, words_per_n), lambda i, j, k: (k, j)),
+    ]
+    args = [x, packed]
+    if scale_mode == "channel":
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)))
+        args.append(scales.reshape(1, N).astype(jnp.float32))
+    elif scale_mode == "block":
+        assert block_k % scale_block == 0
+        in_specs.append(
+            pl.BlockSpec(
+                (block_k // scale_block, block_n), lambda i, j, k: (k, j)
+            )
+        )
+        args.append(scales.astype(jnp.float32))
+
+    kernel = functools.partial(
+        _kernel,
+        fmt=fmt,
+        bits=bits,
+        bn=block_n,
+        scale_mode=scale_mode,
+        scale_block=scale_block,
+        nk=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+        compiler_params=None if interpret else dict(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+    )(*args)

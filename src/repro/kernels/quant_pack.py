@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: fused quantize + bit-pack (the BPU's producer side).
+
+Takes f32 values, encodes them into an arbitrary ExMy format and emits the
+dense uint32 packed stream in one VMEM pass — used when (re)quantizing
+weights, KV blocks, or optimizer state on-device without materializing the
+intermediate code tensor in HBM.
+
+Grid tiles rows; each program quantizes a (bm, N) slab and packs along N.
+N must be a multiple of the packing group size (callers pad — model dims
+are multiples of 128, every group size divides 32).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import bitpack
+from repro.core.formats import FloatFormat, parse_format
+
+
+def _encode_tile(x: jax.Array, fmt: FloatFormat) -> jax.Array:
+    """f32 -> uint32 codes; kernel-friendly ops only (mirrors
+    core.formats._encode_float for E<8 saturating formats)."""
+    a = jnp.abs(x)
+    sign = (x < 0) | ((x == 0) & (jnp.signbit(x)))
+    a = jnp.minimum(a, jnp.float32(fmt.maxval))
+    # exponent via bit twiddling (frexp is not kernel-friendly)
+    bits = jax.lax.bitcast_convert_type(a, jnp.uint32)
+    e32 = (bits >> 23).astype(jnp.int32) - 127  # floor(log2 a) for normals
+    ue = jnp.maximum(e32, fmt.min_unbiased_exp)
+    # integer significand on the 2^(ue - M) grid, RNE
+    scale = jnp.exp2((fmt.man_bits - ue).astype(jnp.float32))
+    q = a * scale
+    qf = jnp.floor(q)
+    rem = q - qf
+    qi = qf.astype(jnp.uint32)
+    round_up = (rem > 0.5) | ((rem == 0.5) & (qi % 2 == 1))
+    qi = qi + round_up.astype(jnp.uint32)
+    carry = qi >= jnp.uint32(2 ** (fmt.man_bits + 1))
+    qi = jnp.where(carry, jnp.uint32(2 ** fmt.man_bits), qi)
+    ue = jnp.where(carry, ue + 1, ue)
+    is_normal = qi >= jnp.uint32(2 ** fmt.man_bits)
+    exp_field = jnp.where(is_normal, (ue + fmt.bias).astype(jnp.uint32), 0)
+    man_field = jnp.where(is_normal, qi - jnp.uint32(2 ** fmt.man_bits), qi)
+    return ((sign.astype(jnp.uint32) << (fmt.exp_bits + fmt.man_bits))
+            | (exp_field << fmt.man_bits) | man_field)
+
+
+def _pack_tile(codes: jax.Array, bits: int) -> jax.Array:
+    """(bm, N) uint32 codes -> (bm, N*bits/32) uint32 words (static unroll)."""
+    g = bitpack.group_size(bits)
+    wpg = bitpack.words_per_group(bits)
+    bm, n = codes.shape
+    c = codes.reshape(bm, n // g, g)
+    words = []
+    for k in range(wpg):
+        word = jnp.zeros((bm, n // g), jnp.uint32)
+        for j in range(g):
+            lo, hi = j * bits, (j + 1) * bits
+            if hi <= 32 * k or lo >= 32 * (k + 1):
+                continue
+            shift = lo - 32 * k
+            piece = (c[:, :, j] << shift) if shift >= 0 else (
+                c[:, :, j] >> (-shift))
+            word = word | piece
+        words.append(word)
+    return jnp.stack(words, axis=-1).reshape(bm, (n // g) * wpg)
+
+
+def _kernel(x_ref, out_ref, *, fmt, bits):
+    codes = _encode_tile(x_ref[...].astype(jnp.float32), fmt)
+    out_ref[...] = _pack_tile(codes, bits)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_name", "block_m",
+                                             "interpret"))
+def quantize_pack_pallas(x: jax.Array, *, fmt_name: str, block_m: int = 128,
+                         interpret: bool = True) -> jax.Array:
+    """x: (M, N) f32 -> (M, N*bits/32) packed uint32."""
+    fmt = parse_format(fmt_name)
+    assert isinstance(fmt, FloatFormat) and fmt.exp_bits < 8
+    m, n = x.shape
+    g = bitpack.group_size(fmt.bits)
+    assert n % g == 0, (n, g)
+    bm = min(block_m, m)
+    while m % bm:
+        bm //= 2
+    bm = max(bm, 1)
+    wn = n * fmt.bits // 32
+    return pl.pallas_call(
+        functools.partial(_kernel, fmt=fmt, bits=fmt.bits),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, wn), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, wn), jnp.uint32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the packed dequant-fused matmul kernel.
+
+Deliberately written from first principles against `core.bitpack` +
+`core.formats` (not the kernel's helper functions) so kernel and reference
+share nothing but the layout contract.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack
+from repro.core.formats import decode, parse_format
+
+
+def packed_matmul_ref(
+    x: jax.Array,
+    packed: jax.Array,
+    scales: Optional[jax.Array],
+    *,
+    fmt_name: str,
+    scale_mode: str = "none",
+    scale_block: int = 32,
+) -> jax.Array:
+    fmt = parse_format(fmt_name)
+    K = packed.shape[0]
+    N = packed.shape[1] * 32 // fmt.bits
+    codes = bitpack.unpack_codes(packed, fmt.bits, N)
+    w = decode(codes, fmt, dtype=jnp.float32)
+    if scale_mode == "channel":
+        w = w * scales.reshape(1, N).astype(jnp.float32)
+    elif scale_mode == "block":
+        w = w * jnp.repeat(scales.astype(jnp.float32), scale_block, axis=0)
+    return jnp.dot(x.astype(jnp.float32), w)

@@ -1,0 +1,457 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (tests may shrink the virtual device count — still before any jax import)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_DRYRUN_DEVICES"]
+    )
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, with zero real allocation:
+  * proof the sharding config is coherent (compile succeeds),
+  * per-device memory analysis (does it fit a 16 GB v5e chip?),
+  * per-device HLO FLOPs / bytes (cost_analysis),
+  * the collective schedule parsed from the partitioned HLO text,
+  * the three roofline terms (compute / memory / collective).
+
+Artifacts land in artifacts/dryrun/<arch>__<shape>__<mesh>__<variant>.json;
+benchmarks/roofline.py and EXPERIMENTS.md consume them.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--variant baseline]
+"""
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link (conservative single-link figure)
+
+ARTIFACT_DIR = Path(os.environ.get("REPRO_ARTIFACT_DIR", "artifacts/dryrun"))
+
+_COLL_OPS = (
+    "all-gather-start", "all-gather", "all-reduce-start", "all-reduce",
+    "reduce-scatter", "all-to-all", "collective-permute-start",
+    "collective-permute",
+)
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+(" + "|".join(_COLL_OPS) + r")\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+
+def _result_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _wire_factor(op: str, g: int) -> float:
+    """Per-device wire bytes as a multiple of the op's per-device *result*
+    bytes (ring algorithms)."""
+    if g <= 1:
+        return 0.0
+    if op.startswith("all-gather"):
+        return (g - 1) / g
+    if op.startswith("all-reduce"):
+        return 2 * (g - 1) / g
+    if op.startswith("reduce-scatter"):
+        return float(g - 1)  # operand = result * g
+    if op.startswith("all-to-all"):
+        return (g - 1) / g
+    return 1.0  # collective-permute
+
+
+def parse_collectives(hlo_text: str):
+    """Aggregate collective ops from partitioned HLO text."""
+    agg = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        rb = _result_bytes(type_str)
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gm2 = _GROUPS_EXPL_RE.search(line)
+            if gm2:
+                g = len(gm2.group(1).split(","))
+        key = (op.replace("-start", ""), g)
+        if key not in agg:
+            agg[key] = {"op": key[0], "group_size": g, "count": 0,
+                        "result_bytes": 0, "wire_bytes": 0.0}
+        a = agg[key]
+        a["count"] += 1
+        a["result_bytes"] += rb
+        a["wire_bytes"] += rb * _wire_factor(op, g)
+    return sorted(agg.values(), key=lambda a: -a["wire_bytes"])
+
+
+def active_params(cfg, specs) -> int:
+    """Parameters touched per token (MoE: shared + top_k experts)."""
+    import jax
+    from repro.models.nn import ParamSpec, QuantSpec
+
+    def leaves(tree):
+        return jax.tree.leaves(
+            tree, is_leaf=lambda x: isinstance(x, (ParamSpec, QuantSpec)))
+
+    total = 0
+    for path, s in jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, (ParamSpec, QuantSpec)))[0]:
+        keys = [getattr(k, "key", None) for k in path]
+        n = int(np.prod(s.shape))
+        if "moe" in keys and keys[-1] in ("w_gate", "w_up", "w_down"):
+            n = n * cfg.moe.top_k // cfg.moe.n_experts
+        total += n
+    return total
+
+
+def _compile_cell(cfg, shape, mesh, variant, microbatches):
+    """Lower + compile one step; return raw per-device cost numbers.
+
+    NOTE: XLA cost analysis counts a while/scan body ONCE, not x trip-count.
+    Callers correct for loop trip counts via per-stack deltas (see
+    dryrun_cell)."""
+    import jax
+    from repro.models import nn
+    from repro.models.registry import build_model
+    from repro.runtime.train_loop import TrainConfig, abstract_state, \
+        make_train_step
+
+    model = build_model(cfg, mesh=mesh)
+    t0 = time.time()
+    if shape.kind == "train":
+        from repro.optim.adamw import AdamWConfig
+        opt = (AdamWConfig(moment_dtype="bfloat16")
+               if variant in ("opt", "opt_sp") else AdamWConfig())
+        tc = TrainConfig(microbatches=microbatches, opt=opt)
+        state = abstract_state(model, mesh, tc)
+        batch = model.input_specs(shape, mesh)
+        step = make_train_step(model, tc)
+        lowered = jax.jit(step, donate_argnums=(0,)).lower(state, batch)
+    elif shape.kind == "prefill":
+        specs = (model.serve_param_specs() if variant in ("flexibit", "opt")
+                 else model.param_specs())
+        params = nn.abstract_params(specs, mesh)
+        batch = model.input_specs(shape, mesh)
+        lowered = jax.jit(lambda p, b: model.prefill(p, b)).lower(
+            params, batch)
+    else:  # decode
+        specs = (model.serve_param_specs()
+                 if variant in ("flexibit", "opt", "opt_kv")
+                 else model.param_specs())
+        params = nn.abstract_params(specs, mesh)
+        inputs = model.input_specs(shape, mesh)
+        lowered = jax.jit(
+            lambda p, c, t, l: model.decode_step(p, c, t, l),
+            donate_argnums=(1,),
+        ).lower(params, inputs["caches"], inputs["tokens"], inputs["lengths"])
+    lower_s = time.time() - t0
+    t1 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t1
+    cost = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "colls": colls,
+        "mem": compiled.memory_analysis(),
+        "lower_s": lower_s,
+        "compile_s": compile_s,
+    }
+
+
+def _stack_variations(cfg):
+    """[(name, updates for L=a, updates for L=a+1, trip_count)] per scanned
+    layer stack.  Uses L=2 vs 3 — GSPMD occasionally picks a different
+    sharding strategy for single-iteration loops, which would corrupt the
+    delta."""
+    out = []
+    if cfg.family == "moe":
+        nd = cfg.first_dense_layers
+        nm = cfg.n_layers - nd
+        base = dict(first_dense_layers=1, n_layers=1 + 2)  # d=1, m=2
+        out.append(("moe_stack", base,
+                    dict(first_dense_layers=1, n_layers=1 + 3), nm))
+        if nd:
+            out.append(("dense_stack", base,
+                        dict(first_dense_layers=2, n_layers=2 + 2), nd))
+    elif cfg.family == "encdec":
+        import dataclasses
+        e2 = dataclasses.replace(cfg.encoder, n_layers=2)
+        e3 = dataclasses.replace(cfg.encoder, n_layers=3)
+        out.append(("dec_stack", dict(n_layers=2, encoder=e2),
+                    dict(n_layers=3, encoder=e2), cfg.n_layers))
+        out.append(("enc_stack", dict(n_layers=2, encoder=e2),
+                    dict(n_layers=2, encoder=e3), cfg.encoder.n_layers))
+    else:
+        out.append(("layers", dict(n_layers=2), dict(n_layers=3),
+                    cfg.n_layers))
+    return out
+
+
+def _merge_colls(base, extra, factor):
+    """Add `factor` x extra's collectives into base's aggregate list."""
+    agg = {(c["op"], c["group_size"]): dict(c) for c in base}
+    for c in extra:
+        k = (c["op"], c["group_size"])
+        if k not in agg:
+            agg[k] = {"op": c["op"], "group_size": c["group_size"],
+                      "count": 0, "result_bytes": 0, "wire_bytes": 0.0}
+        agg[k]["count"] += int(c["count"] * factor)
+        agg[k]["result_bytes"] += c["result_bytes"] * factor
+        agg[k]["wire_bytes"] += c["wire_bytes"] * factor
+    return sorted(agg.values(), key=lambda a: -a["wire_bytes"])
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
+                variant: str = "baseline", mesh=None, out_dir=ARTIFACT_DIR,
+                microbatches: int = 1, save: bool = True, tag: str = ""):
+    from repro.configs import SHAPES, applicable_shapes, get_config
+    from repro.configs.base import QuantPolicy
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import nn
+    from repro.models.registry import build_model
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name not in applicable_shapes(cfg):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "inapplicable (see DESIGN.md §Arch-applicability)"}
+
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi" if multi_pod else "single"
+
+    # variant knobs
+    #   baseline — bf16 compute, f32 train state, unquantized.
+    #   flexibit — the paper's technique, faithful: bit-packed arbitrary-
+    #              format weights (serve shapes).
+    #   opt      — beyond-paper: flexibit + f8 KV cache + bf16 attention
+    #              operands (serve); bf16 attention + bf16 moments + f8 MoE
+    #              dispatch (train).
+    if shape.kind != "train":
+        cfg = cfg.with_(param_dtype="bfloat16")
+        if variant in ("flexibit", "opt", "opt_kv"):
+            kv = "e5m2" if variant in ("opt", "opt_kv") else None
+            cfg = cfg.with_(quant=QuantPolicy(mode="packed", attn="e4m3",
+                                              mlp="e2m3", lm_head="e4m3",
+                                              scale_mode="channel",
+                                              kv_cache=kv))
+        if variant == "opt":
+            cfg = cfg.with_(lowp_attn=True)
+    elif variant in ("opt", "opt_sp"):
+        kw = dict(lowp_attn=True)
+        if variant == "opt_sp":
+            kw["seq_parallel"] = True
+        if cfg.moe is not None:
+            import dataclasses as _dc
+            kw["moe"] = _dc.replace(cfg.moe, dispatch_dtype="float8_e4m3fn")
+        cfg = cfg.with_(**kw)
+    model = build_model(cfg, mesh=mesh)
+
+    full = _compile_cell(cfg, shape, mesh, variant, microbatches)
+    lower_s, compile_s = full["lower_s"], full["compile_s"]
+    mem = full["mem"]
+
+    # correct for scan trip counts: XLA counts each loop body once.
+    # per-stack delta: cost(L=2) - cost(L=1) == one layer's true cost.
+    flops_dev, bytes_dev = full["flops"], full["bytes"]
+    colls = full["colls"]
+    stack_deltas = {}
+    unroll = dict(scan_unroll=True, attn_unroll=True)
+    for name, kw1, kw2, trip in _stack_variations(cfg):
+        c1 = _compile_cell(cfg.with_(**kw1, **unroll), shape, mesh, variant,
+                           microbatches)
+        c2 = _compile_cell(cfg.with_(**kw2, **unroll), shape, mesh, variant,
+                           microbatches)
+        d_flops = max(c2["flops"] - c1["flops"], 0.0)
+        d_bytes = max(c2["bytes"] - c1["bytes"], 0.0)
+        d_colls = _merge_colls([], c2["colls"], 1.0)
+        d_colls = _merge_colls(d_colls, c1["colls"], -1.0)
+        stack_deltas[name] = {"flops": d_flops, "bytes": d_bytes,
+                              "trip": trip}
+        flops_dev += (trip - 1) * d_flops
+        bytes_dev += (trip - 1) * d_bytes
+        colls = _merge_colls(colls, d_colls, trip - 1)
+    colls = [c for c in colls if c["wire_bytes"] > 0 or c["count"] > 0]
+
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    wire_dev = float(sum(c["wire_bytes"] for c in colls))
+
+    # roofline terms (seconds, per step)
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = wire_dev / LINK_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory), ("collective", t_coll)),
+        key=lambda kv: kv[1])[0]
+
+    specs_f = model.param_specs()
+    n_params = nn.count_params(specs_f)
+    n_active = active_params(cfg, specs_f)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6 if shape.kind == "train" else 2
+    model_flops_total = mult * n_active * tokens
+    model_flops_dev = model_flops_total / n_dev
+    useful_ratio = model_flops_dev / flops_dev if flops_dev else 0.0
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "variant": variant,
+        "kind": shape.kind,
+        "n_devices": n_dev,
+        "microbatches": microbatches,
+        "lower_s": round(lower_s, 1),
+        "compile_s": round(compile_s, 1),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_wire_bytes_per_device": wire_dev,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_gb": round(
+                (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                 + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+                / 2**30, 3),
+        },
+        "roofline": {
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_collective_s": t_coll,
+            "dominant": dominant,
+            "model_flops_total": model_flops_total,
+            "useful_flops_ratio": round(useful_ratio, 4),
+            "n_params": n_params,
+            "n_active_params": n_active,
+        },
+        "stack_deltas": stack_deltas,
+        "collectives": colls[:24],
+    }
+    if save:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        vtag = variant + (f"+{tag}" if tag else "")
+        rec["variant"] = vtag
+        name = f"{arch}__{shape_name}__{mesh_name}__{vtag}.json"
+        (out_dir / name).write_text(json.dumps(rec, indent=1))
+    print(json.dumps({k: rec[k] for k in
+                      ("arch", "shape", "mesh", "variant", "compile_s")},
+                     indent=None))
+    print("  memory_analysis:", rec["memory"])
+    print("  cost_analysis: flops/dev=%.3e bytes/dev=%.3e" %
+          (flops_dev, bytes_dev))
+    print("  roofline: compute=%.4fs memory=%.4fs collective=%.4fs -> %s" %
+          (t_compute, t_memory, t_coll, dominant))
+    print("  top collectives:",
+          [(c["op"], c["group_size"], c["count"],
+            f"{c['wire_bytes']/2**20:.1f}MiB") for c in colls[:5]])
+    return rec
+
+
+# Baseline cells all use microbatches=1 so the scan-trip-count cost
+# correction stays exact (one nesting level).  Microbatching is a §Perf
+# memory-hillclimb lever applied per-cell with its own accounting.
+def default_microbatches(arch: str, shape_name: str) -> int:
+    return 1
+
+
+def main(argv=None):
+    from repro.configs import ARCH_IDS, SHAPES, applicable_shapes, get_config
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "flexibit", "opt", "opt_sp", "opt_kv"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=-1)
+    ap.add_argument("--timeout", type=int, default=4800)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if not args.all:
+        for m in meshes:
+            mb = (args.microbatches if args.microbatches > 0
+                  else default_microbatches(args.arch, args.shape))
+            dryrun_cell(args.arch, args.shape, m == "multi", args.variant,
+                        microbatches=mb, tag=args.tag)
+        return
+
+    # runner mode: iterate every cell in a subprocess (isolation + resume)
+    results = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape_name in SHAPES:
+            if shape_name not in applicable_shapes(cfg):
+                results.append((arch, shape_name, "SKIP(by-design)"))
+                continue
+            for m in meshes:
+                name = f"{arch}__{shape_name}__{m}__{args.variant}.json"
+                if (ARTIFACT_DIR / name).exists() and not args.force:
+                    results.append((arch, shape_name, m + ":cached"))
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape_name, "--mesh", m,
+                       "--variant", args.variant]
+                t0 = time.time()
+                try:
+                    p = subprocess.run(cmd, capture_output=True, text=True,
+                                       timeout=args.timeout)
+                    ok = p.returncode == 0
+                    tail = (p.stdout + p.stderr).strip().splitlines()[-6:]
+                except subprocess.TimeoutExpired:
+                    ok, tail = False, ["TIMEOUT"]
+                status = "OK" if ok else "FAIL"
+                results.append((arch, shape_name,
+                                f"{m}:{status}({time.time()-t0:.0f}s)"))
+                print(f"[{arch} x {shape_name} x {m}] {status}", flush=True)
+                if not ok:
+                    print("\n".join("    " + t for t in tail), flush=True)
+    print("\n=== dry-run summary ===")
+    for r in results:
+        print(" ", *r)
+
+
+if __name__ == "__main__":
+    main()

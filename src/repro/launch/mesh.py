@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Target: TPU v5e pods — 256 chips per pod (16x16), 2 pods for multi-pod.
+Axes: ('data', 'model') single-pod; ('pod', 'data', 'model') multi-pod.
+The 'pod' axis carries data parallelism whose collectives cross the
+inter-pod (DCN/OCS) boundary — the dry-run proves those collectives
+partition; roofline treats pod-crossing bytes separately.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (smoke tests see 1 CPU device; only dryrun.py forces
+512 host devices).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int = None, model: int = 2):
+    """Small mesh over whatever devices exist (tests)."""
+    n = n_devices or len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

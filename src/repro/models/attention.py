@@ -1,0 +1,223 @@
+"""Attention primitives: flash-style chunked softmax attention in pure JAX.
+
+One implementation covers every assigned architecture's needs:
+
+* ``flash_attention`` — online-softmax over KV chunks (lax.scan), O(S) memory.
+  Supports causal, bidirectional (encoder/cross) and GQA/MQA grouping.
+* ``sliding_window_attention`` — banded Q-chunk scan: cost linear in S
+  (hymba's local-attention heads; required for the 500k-token cell).
+* ``decode_attention`` — one new token vs a big KV cache.  The cache's
+  sequence axis is sharded over the 'model' mesh axis (see nn.default_rules:
+  'act_kv_seq'); GSPMD turns the softmax/contraction over that axis into
+  partial reductions + all-reduce — flash-decode, for any KV-head count.
+* ``rope`` / ``apply_qk_norm`` — rotary embedding and Qwen3-style QK norm.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary position embedding. x: (B, S, H, hd), positions: (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )  # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def _group(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B, S, Hq, hd) -> (B, S, n_kv, group, hd)."""
+    b, s, hq, hd = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, hd)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset=0,
+    chunk: int = 1024,
+    logit_soft_cap: Optional[float] = None,
+    prefix_len: int = 0,
+    unroll: bool = False,
+    lowp: bool = False,
+) -> jax.Array:
+    """Online-softmax attention, scanning KV in chunks.
+
+    q: (B, Sq, Hq, hd); k: (B, Skv, Hkv, hd); v: (B, Skv, Hkv, vd) —
+    k and v head dims may differ (MLA).  Hq % Hkv == 0.
+    q_offset: absolute position of q[0] (for causal masking during chunked
+    prefill / training the offset is 0; cross-attention passes causal=False).
+    prefix_len: positions < prefix_len attend bidirectionally (prefix-LM).
+    """
+    b, sq, hq, hd = q.shape
+    _, skv, hkv, _ = k.shape
+    vd = v.shape[-1]
+    nchunks = -(-skv // chunk)
+    pad = nchunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunks, chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunks, chunk, hkv, vd).transpose(1, 0, 2, 3, 4)
+
+    # lowp: keep MXU-native bf16 operands; accumulation stays f32 via
+    # preferred_element_type (identical accumulation semantics, half the
+    # operand bytes in HBM and across collectives)
+    op_dtype = q.dtype if lowp else jnp.float32
+    qg = _group(q, hkv).astype(op_dtype) * jnp.asarray(hd ** -0.5, op_dtype)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        idx, k_blk, v_blk = inp
+        k_pos = idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qg, k_blk.astype(op_dtype),
+            preferred_element_type=jnp.float32,
+        )  # (B, Hkv, G, Sq, chunk) f32
+        if logit_soft_cap is not None:
+            s = logit_soft_cap * jnp.tanh(s / logit_soft_cap)
+        mask = k_pos[None, :] <= q_pos[:, None] if causal else (
+            k_pos[None, :] < skv + 0 * q_pos[:, None]
+        )
+        if prefix_len:
+            mask = mask | (k_pos[None, :] < prefix_len)
+        # mask out the zero-padding of the last chunk
+        mask = mask & (k_pos[None, :] < skv)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(op_dtype),
+            v_blk.astype(op_dtype), preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    g = hq // hkv
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, vd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(nchunks), kc, vc),
+        unroll=nchunks if unroll else 1,
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, vd)
+    return out.astype(q.dtype)
+
+
+def sliding_window_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int,
+    chunk: int = 1024,
+    unroll: bool = False,
+    lowp: bool = False,
+) -> jax.Array:
+    """Causal attention restricted to the trailing ``window`` positions,
+    computed bandwise: each Q chunk sees a static-size KV band — total cost
+    O(S * window), which is what makes 500k-token contexts feasible."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    chunk = min(chunk, s)
+    nq = -(-s // chunk)
+    pad = nq * chunk - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    band = window + chunk  # positions a q chunk can see
+    # pad K/V on the left so every band slice is in range
+    kp = jnp.pad(k, ((0, 0), (band, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (band, pad), (0, 0), (0, 0)))
+
+    qc = q.reshape(b, nq, chunk, hq, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(_, inp):
+        i, q_blk = inp
+        start = i * chunk  # absolute position of this q chunk
+        k_band = jax.lax.dynamic_slice_in_dim(kp, start, band + chunk, axis=1)
+        v_band = jax.lax.dynamic_slice_in_dim(vp, start, band + chunk, axis=1)
+        op_dtype = q_blk.dtype if lowp else jnp.float32
+        qg = _group(q_blk, hkv).astype(op_dtype) * jnp.asarray(
+            hd ** -0.5, op_dtype)
+        sres = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_band.astype(op_dtype),
+                          preferred_element_type=jnp.float32)
+        q_pos = start + jnp.arange(chunk)
+        k_pos = start - band + jnp.arange(band + chunk)
+        mask = (k_pos[None, :] <= q_pos[:, None]) & (
+            k_pos[None, :] > q_pos[:, None] - window
+        ) & (k_pos[None, :] >= 0)
+        sres = jnp.where(mask[None, None, None], sres, NEG_INF)
+        p = jax.nn.softmax(sres, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(op_dtype),
+                       v_band.astype(op_dtype),
+                       preferred_element_type=jnp.float32)
+        o = o.transpose(0, 3, 1, 2, 4).reshape(b, chunk, hq, hd)
+        return None, o
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nq), qc),
+                           unroll=nq if unroll else 1)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nq * chunk, hq, hd)
+    return out[:, :s].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    length: jax.Array,
+    lowp: bool = False,
+) -> jax.Array:
+    """One-token attention against a (possibly sequence-sharded) KV cache.
+
+    q: (B, 1, Hq, hd); caches: (B, S, Hkv, hd); length: (B,) valid prefix.
+    The softmax/contraction over S lowers to partial reduce + all-reduce
+    when S is sharded ('act_kv_seq' -> 'model').
+    """
+    b, s, hkv, hd = k_cache.shape
+    vd = v_cache.shape[-1]
+    op_dtype = q.dtype if lowp else jnp.float32
+    qg = _group(q, hkv).astype(op_dtype) * jnp.asarray(hd ** -0.5, op_dtype)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache.astype(op_dtype),
+                        preferred_element_type=jnp.float32)
+    k_pos = jnp.arange(s)
+    mask = k_pos[None, :] < length[:, None]  # (B, S)
+    scores = jnp.where(mask[:, None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(op_dtype),
+                     v_cache.astype(op_dtype),
+                     preferred_element_type=jnp.float32)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, 1, -1, vd)
+    return out.astype(q.dtype)
+
+
+def apply_qk_norm(q, k, q_w, k_w, eps=1e-6):
+    """Qwen3-style per-head RMS norm on q and k (over head_dim)."""
+
+    def norm(x, w):
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+        return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+    return norm(q, q_w), norm(k, k_w)

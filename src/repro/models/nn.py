@@ -1,0 +1,291 @@
+"""Spec-first parameter system + primitive layers.
+
+Every model describes its parameters as a tree of ``ParamSpec`` (shape +
+*logical axis names* + init).  From one spec tree we derive:
+
+* ``init_params``      — real arrays (smoke tests, examples, training)
+* ``abstract_params``  — ShapeDtypeStructs with NamedShardings attached
+                         (the multi-pod dry-run: zero allocation)
+* ``param_shardings``  — NamedSharding tree for jit in_shardings
+
+Logical->mesh translation lives in `logical_to_spec`: a rules table maps
+axis names like 'embed'/'mlp'/'heads'/'expert' onto mesh axes, with a
+divisibility fallback (axes that don't divide evenly are replicated — e.g.
+8 KV heads on a 16-way model axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names (None = replicated)
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """A parameter stored FlexiBit-style: bit-packed codes of an arbitrary
+    ExMy/INT format (+ scales).  Materializes as a `QTensor` pytree whose
+    packed array is `shape[:-1] + (shape[-1]*bits/32,)` uint32."""
+
+    inner: ParamSpec
+    fmt: str  # e.g. 'e2m3'
+    scale_mode: str = "channel"
+    block: int = 32
+
+    @property
+    def shape(self):
+        return self.inner.shape
+
+    @property
+    def axes(self):
+        return self.inner.axes
+
+
+def _is_spec(x):
+    return isinstance(x, (ParamSpec, QuantSpec))
+
+
+def _qtensor_leaves(spec: QuantSpec, make_leaf):
+    """Build a QTensor from a QuantSpec given a leaf factory
+    make_leaf(shape, dtype, axes) -> array-like."""
+    from repro.core.flexgemm import QTensor
+    from repro.core.formats import parse_format
+
+    fmt = parse_format(spec.fmt)
+    shape = spec.inner.shape
+    packed_shape = shape[:-1] + (shape[-1] * fmt.bits // 32,)
+    packed = make_leaf(packed_shape, jnp.uint32, spec.inner.axes)
+    scales = None
+    if spec.scale_mode == "channel":
+        s_shape = shape[:-2] + (shape[-1],)
+        s_axes = spec.inner.axes[:-2] + (spec.inner.axes[-1],)
+        scales = make_leaf(s_shape, jnp.float32, s_axes)
+    elif spec.scale_mode == "block":
+        s_shape = shape[:-2] + (shape[-2] // spec.block, shape[-1])
+        s_axes = spec.inner.axes[:-2] + (None, spec.inner.axes[-1])
+        scales = make_leaf(s_shape, jnp.float32, s_axes)
+    return QTensor(packed, scales, fmt, spec.scale_mode, spec.block)
+
+
+# default logical-axis -> mesh-axis rules. 'data_axes' is whatever the mesh
+# calls its batch/FSDP dimension(s) — ('pod','data') multi-pod, ('data',)
+# single-pod.
+def default_rules(mesh: Mesh) -> Dict[str, Any]:
+    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    data_axes = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+    return {
+        # parameter axes
+        "vocab": "model",
+        "embed": data_axes,  # FSDP: fully shard params over the data axes
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "expert": "model",
+        "expert_mlp": None,
+        "layers": None,
+        "conv": None,
+        "state": None,
+        "lora": None,
+        # activation axes
+        "act_batch": data_axes,
+        "act_seq": None,
+        "act_kv_seq": "model",  # decode KV caches: sequence-sharded
+        "act_embed": None,
+        "act_heads": "model",
+        "act_mlp": "model",
+        "act_vocab": "model",
+    }
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def logical_to_spec(
+    axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Dict[str, Any],
+) -> P:
+    """Logical axes -> PartitionSpec, replicating any dim that doesn't
+    divide by its assigned mesh axes (the divisibility fallback)."""
+    out = []
+    used = set()
+
+    def _flat(a):
+        return tuple(a) if isinstance(a, (tuple, list)) else (a,)
+
+    for name, dim in zip(axes, shape):
+        mesh_axis = rules.get(name) if name is not None else None
+        if mesh_axis is None:
+            out.append(None)
+            continue
+        size = _axis_size(mesh, mesh_axis)
+        flat = _flat(mesh_axis)
+        if dim % size != 0 or any(a in used for a in flat):
+            out.append(None)  # fallback: replicate
+            continue
+        used.update(flat)
+        out.append(mesh_axis)
+    # strip trailing Nones for tidiness
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_shardings(specs, mesh: Mesh, rules=None):
+    rules = rules or default_rules(mesh)
+
+    def mk(s):
+        if isinstance(s, QuantSpec):
+            return _qtensor_leaves(
+                s,
+                lambda shape, dt, axes: NamedSharding(
+                    mesh, logical_to_spec(axes, shape, mesh, rules)),
+            )
+        return NamedSharding(mesh, logical_to_spec(s.axes, s.shape, mesh, rules))
+
+    return jax.tree.map(mk, specs, is_leaf=_is_spec)
+
+
+def abstract_params(specs, mesh: Optional[Mesh] = None, rules=None):
+    """ShapeDtypeStruct tree (with shardings if a mesh is given) — the
+    zero-allocation stand-in used by launch/dryrun.py."""
+    rules = (rules or default_rules(mesh)) if mesh is not None else None
+
+    def leaf(shape, dt, axes):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(shape, dt)
+        sh = NamedSharding(mesh, logical_to_spec(axes, shape, mesh, rules))
+        return jax.ShapeDtypeStruct(shape, dt, sharding=sh)
+
+    def mk(s):
+        if isinstance(s, QuantSpec):
+            return _qtensor_leaves(s, leaf)
+        return leaf(s.shape, s.dtype, s.axes)
+
+    return jax.tree.map(mk, specs, is_leaf=_is_spec)
+
+
+def init_params(specs, key, dtype=None):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def mk_float(s: ParamSpec, k, dt=None):
+        dt = dt or dtype or s.dtype
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dt)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dt)
+        if s.init == "embed":
+            return jax.random.normal(k, s.shape, dt) * s.scale
+        # fan-in scaled normal
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else max(s.shape[-1], 1)
+        std = s.scale / math.sqrt(max(fan_in, 1))
+        return jax.random.normal(k, s.shape, dt) * std
+
+    def mk(s, k):
+        if isinstance(s, QuantSpec):
+            from repro.core.flexgemm import quantize_tensor
+
+            w = mk_float(s.inner, k, dt=jnp.float32)
+            return quantize_tensor(w, s.fmt, scale_mode=s.scale_mode,
+                                   block=s.block)
+        return mk_float(s, k)
+
+    return jax.tree.unflatten(treedef, [mk(s, k) for s, k in zip(leaves, keys)])
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def quantize_params(specs, params):
+    """Convert float params into the packed layout demanded by `specs`
+    (QuantSpec leaves become QTensors) — PTQ for serving."""
+    from repro.core.flexgemm import quantize_tensor
+
+    def mk(s, p):
+        if isinstance(s, QuantSpec):
+            return quantize_tensor(p.astype(jnp.float32), s.fmt,
+                                   scale_mode=s.scale_mode, block=s.block)
+        return p
+
+    return jax.tree.map(mk, specs, params, is_leaf=_is_spec)
+
+
+# ---------------------------------------------------------------------------
+# primitive ops (pure functions over params)
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w + b).astype(x.dtype)
+
+
+def dense(x, w, b=None):
+    """x (..., d_in) @ w (d_in, d_out); w may be a QTensor (packed weights)."""
+    from repro.core.flexgemm import QTensor, matmul as qmatmul
+
+    if isinstance(w, QTensor):
+        y = qmatmul(x, w)
+    else:
+        y = jnp.matmul(x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = dense(x, w_gate)
+    u = dense(x, w_up)
+    return dense(jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    h = jax.nn.gelu(dense(x, w_in, b_in))
+    return dense(h, w_out, b_out)
+
+
+def shard(x, mesh: Optional[Mesh], spec: P):
+    """Sharding constraint helper (no-op without a mesh)."""
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

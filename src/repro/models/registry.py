@@ -1,0 +1,15 @@
+"""Model construction entry point."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig
+from .transformer import FlexLM
+
+
+def build_model(cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                rules=None) -> FlexLM:
+    return FlexLM(cfg, mesh=mesh, rules=rules)

@@ -1,0 +1,236 @@
+"""State-space / linear-recurrence token mixers: Mamba (hymba) and RWKV6.
+
+Both are O(S) in sequence length with O(1) decode state — the reason the
+hymba / rwkv6 cells run the 500k-token long-context shape that pure
+full-attention architectures skip.
+
+Training/prefill uses a `lax.scan` over time steps (sequential but
+compile-compact); decode uses the single-step transition functions.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .nn import ParamSpec, dense
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (diagonal A), as used by hymba's SSM heads
+# ---------------------------------------------------------------------------
+
+
+def mamba_param_specs(d_model: int, d_inner: int, state: int, dt_rank: int,
+                      conv_width: int) -> Dict[str, ParamSpec]:
+    return {
+        "in_proj": ParamSpec((d_model, 2 * d_inner), ("embed", "mlp")),
+        "conv_w": ParamSpec((conv_width, d_inner), ("conv", "mlp")),
+        "conv_b": ParamSpec((d_inner,), ("mlp",), init="zeros"),
+        "x_proj": ParamSpec((d_inner, dt_rank + 2 * state), ("mlp", None)),
+        "dt_proj": ParamSpec((dt_rank, d_inner), ("lora", "mlp")),
+        "dt_bias": ParamSpec((d_inner,), ("mlp",), init="zeros"),
+        "a_log": ParamSpec((d_inner, state), ("mlp", "state"), init="ones"),
+        "d_skip": ParamSpec((d_inner,), ("mlp",), init="ones"),
+        "out_proj": ParamSpec((d_inner, d_model), ("mlp", "embed")),
+    }
+
+
+def _mamba_scan_inputs(x, p, state: int, dt_rank: int):
+    """Shared projections for scan/step. x: (B, S, d_model)."""
+    xz = dense(x, p["in_proj"])  # (B, S, 2*d_inner)
+    d_inner = xz.shape[-1] // 2
+    xi, z = xz[..., :d_inner], xz[..., d_inner:]
+    # depthwise causal conv over time
+    cw = p["conv_w"].shape[0]
+    xi_pad = jnp.pad(xi, ((0, 0), (cw - 1, 0), (0, 0)))
+    conv = sum(
+        xi_pad[:, i : xi.shape[1] + i] * p["conv_w"][i][None, None]
+        for i in range(cw)
+    ) + p["conv_b"]
+    xi = jax.nn.silu(conv)
+    bcd = dense(xi, p["x_proj"])  # (B, S, dt_rank + 2*state)
+    dt = jax.nn.softplus(dense(bcd[..., :dt_rank], p["dt_proj"]) + p["dt_bias"])
+    b_in = bcd[..., dt_rank : dt_rank + state]
+    c_in = bcd[..., dt_rank + state :]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (d_inner, state)
+    return xi, z, dt, b_in, c_in, a
+
+
+def mamba_forward(x, p, *, state: int, dt_rank: int, return_state=False,
+                  lowp: bool = False):
+    """Full-sequence selective scan. x: (B, S, d_model) -> (B, S, d_model).
+
+    With return_state=True also returns (final_h, conv_tail) so a decode loop
+    can continue where prefill stopped.
+    """
+    xi_raw_needed = return_state
+    xz = dense(x, p["in_proj"])
+    d_inner = xz.shape[-1] // 2
+    xi0, z = xz[..., :d_inner], xz[..., d_inner:]
+    cw = p["conv_w"].shape[0]
+    xi_pad = jnp.pad(xi0, ((0, 0), (cw - 1, 0), (0, 0)))
+    conv = sum(
+        xi_pad[:, i : xi0.shape[1] + i] * p["conv_w"][i][None, None]
+        for i in range(cw)
+    ) + p["conv_b"]
+    xi = jax.nn.silu(conv)
+    bcd = dense(xi, p["x_proj"])
+    dt = jax.nn.softplus(dense(bcd[..., :dt_rank], p["dt_proj"]) + p["dt_bias"])
+    b_in = bcd[..., dt_rank : dt_rank + state]
+    c_in = bcd[..., dt_rank + state :]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    def step(h, inp):
+        xi_t, dt_t, b_t, c_t = (z.astype(jnp.float32) for z in inp)
+        da = jnp.exp(dt_t[..., None] * a[None])  # (B, d_inner, N)
+        h = h * da + (dt_t * xi_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    b, s, _ = xi.shape
+    stream_dt = x.dtype if lowp else jnp.float32
+    h0 = jnp.zeros((b, d_inner, state), jnp.float32)
+    xs = (
+        xi.transpose(1, 0, 2).astype(stream_dt),
+        dt.transpose(1, 0, 2).astype(stream_dt),
+        b_in.transpose(1, 0, 2).astype(stream_dt),
+        c_in.transpose(1, 0, 2).astype(stream_dt),
+    )
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2)  # (B, S, d_inner)
+    y = y + xi.astype(jnp.float32) * p["d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(y.astype(x.dtype), p["out_proj"])
+    if return_state:
+        # conv buffer: the raw (pre-activation) last cw-1 inputs
+        tail = xi0[:, -(cw - 1):].astype(jnp.float32)
+        if s < cw - 1:
+            tail = jnp.pad(tail, ((0, 0), (cw - 1 - s, 0), (0, 0)))
+        return out, h_fin, tail
+    return out
+
+
+def mamba_decode_step(x_t, h, conv_buf, p, *, state: int, dt_rank: int):
+    """One token. x_t: (B, 1, d); h: (B, d_inner, N); conv_buf: (B, cw-1,
+    d_inner) trailing inputs for the depthwise conv window."""
+    cw = p["conv_w"].shape[0]
+    xz = dense(x_t, p["in_proj"])
+    d_inner = xz.shape[-1] // 2
+    xi, z = xz[..., :d_inner], xz[..., d_inner:]
+    win = jnp.concatenate([conv_buf, xi[:, 0:1]], axis=1)  # (B, cw, d_inner)
+    conv = jnp.einsum("bcd,cd->bd", win, p["conv_w"]) + p["conv_b"]
+    xi_t = jax.nn.silu(conv)  # (B, d_inner)
+    bcd = dense(xi_t[:, None], p["x_proj"])[:, 0]
+    dt = jax.nn.softplus(
+        dense(bcd[None, :, :dt_rank], p["dt_proj"])[0] + p["dt_bias"]
+    )
+    b_t = bcd[:, dt_rank : dt_rank + state]
+    c_t = bcd[:, dt_rank + state :]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt[..., None] * a[None])
+    h = h * da + (dt * xi_t)[..., None] * b_t[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c_t) + xi_t * p["d_skip"]
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = dense(y[:, None].astype(x_t.dtype), p["out_proj"])
+    return out, h, win[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch): data-dependent per-channel decay linear recurrence
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_param_specs(d_model: int, head_dim: int, decay_lora: int):
+    return {
+        "r_proj": ParamSpec((d_model, d_model), ("embed", "heads")),
+        "k_proj": ParamSpec((d_model, d_model), ("embed", "heads")),
+        "v_proj": ParamSpec((d_model, d_model), ("embed", "heads")),
+        "g_proj": ParamSpec((d_model, d_model), ("embed", "heads")),
+        "w0": ParamSpec((d_model,), ("heads",), init="zeros"),
+        "w1": ParamSpec((d_model, decay_lora), ("embed", "lora")),
+        "w2": ParamSpec((decay_lora, d_model), ("lora", "heads")),
+        "u_bonus": ParamSpec((d_model,), ("heads",), init="zeros"),
+        "out_proj": ParamSpec((d_model, d_model), ("heads", "embed")),
+        "ln_w": ParamSpec((d_model,), ("heads",), init="ones"),
+    }
+
+
+def _rwkv_projections(x, p):
+    r = dense(x, p["r_proj"])
+    k = dense(x, p["k_proj"])
+    v = dense(x, p["v_proj"])
+    g = jax.nn.silu(dense(x, p["g_proj"]))
+    # data-dependent decay (Finch): w_t = exp(-exp(w0 + tanh(x w1) w2))
+    wlog = p["w0"] + dense(jnp.tanh(dense(x, p["w1"])), p["w2"])
+    w = jnp.exp(-jnp.exp(wlog.astype(jnp.float32)))
+    return r, k, v, g, w
+
+
+def _heads(x, hd):
+    b, s, d = x.shape
+    return x.reshape(b, s, d // hd, hd)
+
+
+def rwkv6_forward(x, p, *, head_dim: int, return_state: bool = False,
+                  lowp: bool = False):
+    """Full-sequence WKV recurrence. x: (B, S, d) -> (B, S, d).
+
+    lowp keeps the scanned r/k/v/w streams in the input dtype (the state
+    and per-step accumulation stay f32)."""
+    r, k, v, g, w = _rwkv_projections(x, p)
+    hd = head_dim
+    b, s, d = x.shape
+    h = d // hd
+    rh, kh, vh = _heads(r, hd), _heads(k, hd), _heads(v, hd)
+    wh = _heads(w, hd)
+    u = p["u_bonus"].reshape(h, hd).astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = (z.astype(jnp.float32) for z in inp)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B, H, hd, hd)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = S * w_t[..., :, None] + kv
+        return S, out
+
+    stream_dt = x.dtype if lowp else jnp.float32
+    S0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    xs = tuple(
+        a.transpose(1, 0, 2, 3).astype(stream_dt) for a in (rh, kh, vh, wh)
+    )
+    S_fin, outs = jax.lax.scan(step, S0, xs)
+    y = outs.transpose(1, 0, 2, 3).reshape(b, s, d)
+    # per-head group norm, then gate
+    y = y.reshape(b, s, h, hd)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 1e-5)
+    y = y.reshape(b, s, d) * p["ln_w"]
+    y = (y * g.astype(jnp.float32)).astype(x.dtype)
+    out = dense(y, p["out_proj"])
+    if return_state:
+        return out, S_fin
+    return out
+
+
+def rwkv6_decode_step(x_t, S, p, *, head_dim: int):
+    """One token; S: (B, H, hd, hd) recurrent state."""
+    r, k, v, g, w = _rwkv_projections(x_t, p)
+    hd = head_dim
+    b, _, d = x_t.shape
+    h = d // hd
+    r_t = r[:, 0].reshape(b, h, hd).astype(jnp.float32)
+    k_t = k[:, 0].reshape(b, h, hd).astype(jnp.float32)
+    v_t = v[:, 0].reshape(b, h, hd).astype(jnp.float32)
+    w_t = w[:, 0].reshape(b, h, hd)
+    u = p["u_bonus"].reshape(h, hd).astype(jnp.float32)
+    kv = k_t[..., :, None] * v_t[..., None, :]
+    out = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+    S = S * w_t[..., :, None] + kv
+    y = out.reshape(b, 1, h, hd)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    y = ((y - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(b, 1, d) * p["ln_w"]
+    y = (y * g.astype(jnp.float32)).astype(x_t.dtype)
+    return dense(y, p["out_proj"]), S

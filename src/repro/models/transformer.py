@@ -1,0 +1,969 @@
+"""Unified transformer-family LM covering all ten assigned architectures.
+
+One `FlexLM` class assembles, from an `ArchConfig`:
+
+* dense GQA/MQA decoders (deepseek-7b, qwen1.5-0.5b, qwen3-32b, granite-20b)
+* MLA + MoE decoders (deepseek-v2-236b, deepseek-v3-671b)
+* hybrid attention+SSM (hymba-1.5b), attention-free RWKV6 (rwkv6-7b)
+* encoder-decoder with stub audio frontend (whisper-small)
+* prefix-LM VLM with stub vision frontend (paligemma-3b)
+
+Uniform per-family layer stacks are scanned (`lax.scan`) over stacked
+parameters — compile-time stays flat in depth.  Non-uniform prefixes (the
+first dense layers of the DeepSeek MoEs, whisper's encoder) are separate
+stacks.  The FlexiBit quantization policy plugs in at the ParamSpec level:
+any big matmul can be a bit-packed QTensor (serving) or fake-quantized
+(QAT) in an arbitrary ExMy format.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, dtype_of
+from . import attention as A
+from . import ssm as S
+from .moe import moe_ffn, moe_param_specs
+from .nn import (
+    ParamSpec,
+    dense,
+    layer_norm,
+    rms_norm,
+    shard,
+)
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _stack_specs(specs: Dict[str, Any], n: int):
+    """Give every spec a leading ('layers', n) axis."""
+
+    def add(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype, s.init,
+                         s.scale)
+
+    return jax.tree.map(add, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _norm(x, w, b=None, kind="rmsnorm"):
+    return rms_norm(x, w) if kind == "rmsnorm" else layer_norm(x, w, b)
+
+
+def _ring_cache(k: jax.Array, s: int, window: int) -> jax.Array:
+    """Lay the last `window` keys/values into ring-buffer slot order
+    (slot = position % window), matching the decode path's convention."""
+    if window is None or s <= window:
+        pad = 0 if window is None else window - s
+        return jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+    last = k[:, s - window:]
+    return jnp.roll(last, s % window, axis=1)
+
+
+def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    """Classic transformer sinusoidal embedding; works at any length
+    (whisper's learned table is replaced so 32k-context cells are defined)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+
+class FlexLM:
+    def __init__(self, cfg: ArchConfig, mesh: Optional[Mesh] = None, rules=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.rules = rules
+        self.compute_dtype = dtype_of(cfg.compute_dtype)
+        self.param_dtype = dtype_of(cfg.param_dtype)
+        d = cfg.d_model
+        self._batch_axes = None
+        if mesh is not None:
+            axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+            self._batch_axes = axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    # -- sharding helpers --------------------------------------------------
+    def _shard_act(self, x, spec_tail=(None, None)):
+        if self.mesh is None:
+            return x
+        ba = self._batch_axes
+        if ba is None:
+            return x
+        size = int(np.prod([self.mesh.shape[a] for a in (ba if isinstance(ba, tuple) else (ba,))]))
+        if x.shape[0] % size != 0:
+            return x  # divisibility fallback (e.g. batch 1 at 500k decode)
+        return shard(x, self.mesh, P(ba, *spec_tail))
+
+    # ------------------------------------------------------------------
+    # parameter specs
+    # ------------------------------------------------------------------
+
+    def _attn_specs(self) -> Dict[str, ParamSpec]:
+        c = self.cfg
+        d, hq, hkv, hd = c.d_model, c.n_heads, c.n_kv_heads, c.hd
+        if c.mla:
+            m = c.mla
+            qd = m.nope_head_dim + m.rope_head_dim
+            sp = {
+                "wkv_a": ParamSpec((d, m.kv_lora + m.rope_head_dim), ("embed", "lora")),
+                "kv_norm": ParamSpec((m.kv_lora,), ("lora",), init="ones"),
+                "wkv_b": ParamSpec(
+                    (m.kv_lora, hq * (m.nope_head_dim + m.v_head_dim)),
+                    ("lora", "heads"),
+                ),
+                "wo": ParamSpec((hq * m.v_head_dim, d), ("heads", "embed")),
+            }
+            if m.q_lora:
+                sp["wq_a"] = ParamSpec((d, m.q_lora), ("embed", "lora"))
+                sp["q_norm"] = ParamSpec((m.q_lora,), ("lora",), init="ones")
+                sp["wq_b"] = ParamSpec((m.q_lora, hq * qd), ("lora", "heads"))
+            else:
+                sp["wq"] = ParamSpec((d, hq * qd), ("embed", "heads"))
+            return sp
+        sp = {
+            "wq": ParamSpec((d, hq * hd), ("embed", "heads")),
+            "wk": ParamSpec((d, hkv * hd), ("embed", "kv_heads")),
+            "wv": ParamSpec((d, hkv * hd), ("embed", "kv_heads")),
+            "wo": ParamSpec((hq * hd, d), ("heads", "embed")),
+        }
+        if c.qkv_bias:
+            sp["bq"] = ParamSpec((hq * hd,), ("heads",), init="zeros")
+            sp["bk"] = ParamSpec((hkv * hd,), ("kv_heads",), init="zeros")
+            sp["bv"] = ParamSpec((hkv * hd,), ("kv_heads",), init="zeros")
+        if c.qk_norm:
+            sp["q_norm"] = ParamSpec((hd,), (None,), init="ones")
+            sp["k_norm"] = ParamSpec((hd,), (None,), init="ones")
+        return sp
+
+    def _mlp_specs(self, d_ff=None) -> Dict[str, ParamSpec]:
+        c = self.cfg
+        d, f = c.d_model, d_ff or c.d_ff
+        if c.act == "gelu":  # whisper-style with biases
+            return {
+                "w_in": ParamSpec((d, f), ("embed", "mlp")),
+                "b_in": ParamSpec((f,), ("mlp",), init="zeros"),
+                "w_out": ParamSpec((f, d), ("mlp", "embed")),
+                "b_out": ParamSpec((d,), ("embed",), init="zeros"),
+            }
+        return {  # swiglu / geglu
+            "w_gate": ParamSpec((d, f), ("embed", "mlp")),
+            "w_up": ParamSpec((d, f), ("embed", "mlp")),
+            "w_down": ParamSpec((f, d), ("mlp", "embed")),
+        }
+
+    def _norm_specs(self, names) -> Dict[str, ParamSpec]:
+        d = self.cfg.d_model
+        sp = {}
+        for n in names:
+            sp[n] = ParamSpec((d,), ("embed",), init="ones")
+            if self.cfg.norm_type == "layernorm":
+                sp[n + "_b"] = ParamSpec((d,), ("embed",), init="zeros")
+        return sp
+
+    def _block_specs(self, kind: str) -> Dict[str, Any]:
+        """kind: dense | moe | hybrid | rwkv | enc | dec"""
+        c = self.cfg
+        sp: Dict[str, Any] = {}
+        if kind == "rwkv":
+            r = c.rwkv
+            sp["mix"] = S.rwkv6_param_specs(c.d_model, r.head_dim, r.decay_lora)
+            # rwkv channel mix
+            sp["ffn"] = {
+                "w_r": ParamSpec((c.d_model, c.d_model), ("embed", "heads")),
+                "w_k": ParamSpec((c.d_model, c.d_ff), ("embed", "mlp")),
+                "w_v": ParamSpec((c.d_ff, c.d_model), ("mlp", "embed")),
+            }
+            sp.update(self._norm_specs(["ln1", "ln2"]))
+            return sp
+        sp["attn"] = self._attn_specs()
+        if kind == "hybrid":
+            s = c.ssm
+            d_inner = s.expand * c.d_model
+            dt_rank = s.dt_rank or max(c.d_model // 16, 8)
+            sp["ssm"] = S.mamba_param_specs(
+                c.d_model, d_inner, s.state, dt_rank, s.conv_width
+            )
+        if kind == "moe":
+            sp["moe"] = moe_param_specs(c.d_model, c.moe)
+        else:
+            sp["mlp"] = self._mlp_specs()
+        if kind == "dec":
+            sp["xattn"] = self._attn_specs()
+            sp.update(self._norm_specs(["ln1", "ln2", "ln3"]))
+        else:
+            sp.update(self._norm_specs(["ln1", "ln2"]))
+        return sp
+
+    def param_specs(self) -> Dict[str, Any]:
+        c = self.cfg
+        d, vp = c.d_model, c.padded_vocab
+        specs: Dict[str, Any] = {
+            "embed": ParamSpec((vp, d), ("vocab", "embed"), init="embed",
+                               scale=0.02),
+        }
+        specs.update(self._norm_specs(["final_norm"]))
+        if not c.tie_embeddings:
+            specs["lm_head"] = ParamSpec((d, vp), ("embed", "vocab"))
+
+        if c.family == "rwkv":
+            specs["layers"] = _stack_specs(self._block_specs("rwkv"), c.n_layers)
+        elif c.family == "ssm":
+            specs["layers"] = _stack_specs(self._block_specs("rwkv"), c.n_layers)
+        elif c.family == "hybrid":
+            specs["layers"] = _stack_specs(self._block_specs("hybrid"), c.n_layers)
+        elif c.family == "moe":
+            nd = c.first_dense_layers
+            if nd:
+                specs["dense_layers"] = _stack_specs(self._block_specs("dense"), nd)
+            specs["layers"] = _stack_specs(self._block_specs("moe"), c.n_layers - nd)
+        elif c.family == "encdec":
+            specs["enc_layers"] = _stack_specs(
+                self._block_specs("dense"), c.encoder.n_layers
+            )
+            specs["enc_norm"] = ParamSpec((d,), ("embed",), init="ones")
+            specs["enc_norm_b"] = ParamSpec((d,), ("embed",), init="zeros")
+            specs["layers"] = _stack_specs(self._block_specs("dec"), c.n_layers)
+        else:  # dense, vlm
+            specs["layers"] = _stack_specs(self._block_specs("dense"), c.n_layers)
+        return specs
+
+    # -- FlexiBit quantization policy -----------------------------------
+
+    _ATTN_KEYS = frozenset({"wq", "wk", "wv", "wo", "wq_b", "wkv_b"})
+    _MLP_KEYS = frozenset({"w_gate", "w_up", "w_down", "w_in", "w_out",
+                           "shared_gate", "shared_up", "shared_down",
+                           "w_k", "w_v", "w_r"})
+
+    def serve_param_specs(self):
+        """param_specs with the cfg.quant policy applied: selected weights
+        become bit-packed QTensors of arbitrary ExMy/INT formats."""
+        from repro.core.bitpack import group_size
+        from repro.core.formats import parse_format
+        from repro.models.nn import QuantSpec
+
+        base = self.param_specs()
+        q = self.cfg.quant
+        if q is None or q.mode != "packed":
+            return base
+
+        def rewrite(path, s):
+            if not isinstance(s, ParamSpec) or len(s.shape) < 2:
+                return s
+            keys = [getattr(k2, "key", None) for k2 in path]
+            name = keys[-1]
+            if "moe" in keys and name in ("w_gate", "w_up", "w_down"):
+                return s  # expert weights live inside shard_map: kept float
+            fmt = None
+            if name in self._ATTN_KEYS:
+                fmt = q.attn
+            elif name in self._MLP_KEYS:
+                fmt = q.mlp
+            elif name == "embed":
+                fmt = q.embed
+            elif name == "lm_head":
+                fmt = q.lm_head
+            if fmt is None:
+                return s
+            f = parse_format(fmt)
+            n = s.shape[-1]
+            if (n * f.bits) % 32 != 0 or n % group_size(f.bits) != 0:
+                return s  # not packable without padding: keep float
+            if q.scale_mode == "block" and s.shape[-2] % q.block != 0:
+                return s
+            return QuantSpec(s, f.name, q.scale_mode, q.block)
+
+        return jax.tree_util.tree_map_with_path(
+            rewrite, base, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    # ------------------------------------------------------------------
+    # attention (full-sequence and decode)
+    # ------------------------------------------------------------------
+
+    def _attn_full(self, x, p, positions, *, causal=True, prefix_len=0,
+                   kv_override=None, return_kv=False):
+        c = self.cfg
+        hq, hkv, hd = c.n_heads, c.n_kv_heads, c.hd
+        b, s, _ = x.shape
+        if c.mla:
+            return self._mla_full(x, p, positions, return_kv=return_kv)
+        q = dense(x, p["wq"], p.get("bq")).reshape(b, s, hq, hd)
+        if kv_override is None:
+            k = dense(x, p["wk"], p.get("bk")).reshape(b, s, hkv, hd)
+            v = dense(x, p["wv"], p.get("bv")).reshape(b, s, hkv, hd)
+        else:
+            k, v = kv_override
+        if c.qk_norm:
+            q, k = A.apply_qk_norm(q, k, p["q_norm"], p["k_norm"])
+        if c.pos_embed == "rope":
+            if positions is not None and kv_override is None:
+                q = A.rope(q, positions, c.rope_theta)
+                k = A.rope(k, positions, c.rope_theta)
+            elif positions is not None:
+                q = A.rope(q, positions, c.rope_theta)
+        q = self._shard_act(q, (None, "model", None)) if hq % self._model_size() == 0 else q
+        if c.sliding_window and causal:
+            o = A.sliding_window_attention(q, k, v, window=c.sliding_window,
+                                           chunk=c.attn_chunk,
+                                           unroll=c.attn_unroll,
+                                           lowp=c.lowp_attn)
+        else:
+            o = A.flash_attention(q, k, v, causal=causal,
+                                  chunk=c.attn_chunk,
+                                  logit_soft_cap=c.logit_soft_cap,
+                                  prefix_len=prefix_len,
+                                  unroll=c.attn_unroll,
+                                  lowp=c.lowp_attn)
+        out = dense(o.reshape(b, s, hq * hd), p["wo"])
+        if return_kv:
+            return out, (k, v)
+        return out
+
+    def _model_size(self):
+        if self.mesh is None or "model" not in self.mesh.axis_names:
+            return 1
+        return self.mesh.shape["model"]
+
+    def _mla_full(self, x, p, positions, *, return_kv=False):
+        c, m = self.cfg, self.cfg.mla
+        b, s, _ = x.shape
+        hq = c.n_heads
+        nd, rd, vd = m.nope_head_dim, m.rope_head_dim, m.v_head_dim
+        if "wq_a" in p:
+            ql = rms_norm(dense(x, p["wq_a"]), p["q_norm"])
+            q = dense(ql, p["wq_b"]).reshape(b, s, hq, nd + rd)
+        else:
+            q = dense(x, p["wq"]).reshape(b, s, hq, nd + rd)
+        q_nope, q_rope = q[..., :nd], q[..., nd:]
+        q_rope = A.rope(q_rope, positions, c.rope_theta)
+
+        kv_a = dense(x, p["wkv_a"])
+        c_kv = rms_norm(kv_a[..., : m.kv_lora], p["kv_norm"])
+        k_rope = kv_a[..., m.kv_lora:].reshape(b, s, 1, rd)
+        k_rope = A.rope(k_rope, positions, c.rope_theta)
+
+        kv = dense(c_kv, p["wkv_b"]).reshape(b, s, hq, nd + vd)
+        k_nope, v = kv[..., :nd], kv[..., nd:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, s, hq, rd))], axis=-1
+        )
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = A.flash_attention(q_full, k, v, causal=True, chunk=c.attn_chunk,
+                              unroll=c.attn_unroll, lowp=c.lowp_attn)
+        out = dense(o.reshape(b, s, hq * vd), p["wo"])
+        if return_kv:
+            return out, (c_kv, k_rope.reshape(b, s, rd))
+        return out
+
+    def _attn_decode(self, x_t, p, cache_k, cache_v, length):
+        """x_t: (B, 1, d); caches: (B, S, Hkv, hd); length: (B,)."""
+        c = self.cfg
+        hq, hkv, hd = c.n_heads, c.n_kv_heads, c.hd
+        b = x_t.shape[0]
+        q = dense(x_t, p["wq"], p.get("bq")).reshape(b, 1, hq, hd)
+        k = dense(x_t, p["wk"], p.get("bk")).reshape(b, 1, hkv, hd)
+        v = dense(x_t, p["wv"], p.get("bv")).reshape(b, 1, hkv, hd)
+        if c.qk_norm:
+            q, k = A.apply_qk_norm(q, k, p["q_norm"], p["k_norm"])
+        if c.pos_embed == "rope":
+            pos = length[:, None]  # (B, 1)
+            q = A.rope(q, pos, c.rope_theta)
+            k = A.rope(k, pos, c.rope_theta)
+        s_max = cache_k.shape[1]
+        if c.sliding_window:
+            slot = length % s_max  # ring buffer for sliding-window caches
+        else:
+            slot = length
+        cache_k = cache_k.at[jnp.arange(b), slot].set(
+            k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[jnp.arange(b), slot].set(
+            v[:, 0].astype(cache_v.dtype))
+        eff_len = jnp.minimum(length + 1, s_max) if c.sliding_window else length + 1
+        o = A.decode_attention(q, cache_k, cache_v, eff_len, lowp=c.lowp_attn)
+        out = dense(o.reshape(b, 1, hq * hd), p["wo"])
+        return out, cache_k, cache_v
+
+    def _mla_decode(self, x_t, p, cache_c, cache_r, length):
+        """Absorbed MLA decode: cache holds the kv_lora latent + rope key."""
+        c, m = self.cfg, self.cfg.mla
+        b = x_t.shape[0]
+        hq = c.n_heads
+        nd, rd, vd = m.nope_head_dim, m.rope_head_dim, m.v_head_dim
+        if "wq_a" in p:
+            ql = rms_norm(dense(x_t, p["wq_a"]), p["q_norm"])
+            q = dense(ql, p["wq_b"]).reshape(b, 1, hq, nd + rd)
+        else:
+            q = dense(x_t, p["wq"]).reshape(b, 1, hq, nd + rd)
+        q_nope, q_rope = q[..., :nd], q[..., nd:]
+        pos = length[:, None]
+        q_rope = A.rope(q_rope, pos, c.rope_theta)
+
+        kv_a = dense(x_t, p["wkv_a"])
+        c_t = rms_norm(kv_a[..., : m.kv_lora], p["kv_norm"])[:, 0]  # (B, dc)
+        r_t = A.rope(kv_a[..., m.kv_lora:].reshape(b, 1, 1, rd), pos,
+                     c.rope_theta)[:, 0, 0]  # (B, rd)
+        cache_c = cache_c.at[jnp.arange(b), length].set(
+            c_t.astype(cache_c.dtype))
+        cache_r = cache_r.at[jnp.arange(b), length].set(
+            r_t.astype(cache_r.dtype))
+
+        from repro.core.flexgemm import QTensor, dequantize
+        wkv_b_mat = p["wkv_b"]
+        if isinstance(wkv_b_mat, QTensor):  # absorbed path needs the matrix
+            wkv_b_mat = dequantize(wkv_b_mat, dtype=self.compute_dtype)
+        wkv_b = wkv_b_mat.reshape(m.kv_lora, hq, nd + vd)
+        w_k, w_v = wkv_b[..., :nd], wkv_b[..., nd:]
+        # absorb W_uk into q: (B,1,H,nd) x (dc,H,nd) -> (B,H,dc)
+        q_abs = jnp.einsum("bhn,chn->bhc", q_nope[:, 0].astype(jnp.float32),
+                           w_k.astype(jnp.float32))
+        scale = (nd + rd) ** -0.5
+        s_lat = jnp.einsum("bhc,bsc->bhs", q_abs,
+                           cache_c.astype(jnp.float32)) * scale
+        s_rope = jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
+                            cache_r.astype(jnp.float32)) * scale
+        scores = s_lat + s_rope
+        mask = jnp.arange(cache_c.shape[1])[None, :] < (length + 1)[:, None]
+        scores = jnp.where(mask[:, None], scores, A.NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhs,bsc->bhc", w, cache_c.astype(jnp.float32))
+        o = jnp.einsum("bhc,chv->bhv", o_lat, w_v.astype(jnp.float32))
+        out = dense(o.reshape(b, 1, hq * vd).astype(x_t.dtype), p["wo"])
+        return out, cache_c, cache_r
+
+    # ------------------------------------------------------------------
+    # blocks (full sequence)
+    # ------------------------------------------------------------------
+
+    def _mlp(self, x, p):
+        c = self.cfg
+        if c.act == "gelu":
+            h = jax.nn.gelu(dense(x, p["w_in"], p["b_in"]))
+            return dense(h, p["w_out"], p["b_out"])
+        g = dense(x, p["w_gate"])
+        u = dense(x, p["w_up"])
+        act = jax.nn.gelu(g) if c.act == "geglu" else jax.nn.silu(g)
+        y = act * u
+        y = self._shard_act(y, (None, "model")) if y.shape[-1] % self._model_size() == 0 else y
+        return dense(y, p["w_down"])
+
+    def _block_full(self, kind, h, p, positions, prefix_len=0, enc_out=None,
+                    collect=False):
+        """Returns (h, aux, cache) — cache is a dict when collect=True."""
+        c = self.cfg
+        nt = c.norm_type
+        aux = jnp.float32(0.0)
+        cache = None
+        if kind == "rwkv":
+            r = c.rwkv
+            x1 = _norm(h, p["ln1"], p.get("ln1_b"), nt)
+            if collect:
+                y, s_fin = S.rwkv6_forward(x1, p["mix"], head_dim=r.head_dim,
+                                           return_state=True,
+                                           lowp=c.lowp_attn)
+                cache = {"rwkv_state": s_fin}
+            else:
+                y = S.rwkv6_forward(x1, p["mix"], head_dim=r.head_dim,
+                                    lowp=c.lowp_attn)
+            h = h + y
+            z = _norm(h, p["ln2"], p.get("ln2_b"), nt)
+            ffn = p["ffn"]
+            k = jnp.square(jax.nn.relu(dense(z, ffn["w_k"])))
+            y = jax.nn.sigmoid(dense(z, ffn["w_r"])) * dense(k, ffn["w_v"])
+            return h + y, aux, cache
+        x1 = _norm(h, p["ln1"], p.get("ln1_b"), nt)
+        if kind == "hybrid":
+            s_cfg = c.ssm
+            dt_rank = s_cfg.dt_rank or max(c.d_model // 16, 8)
+            if collect:
+                a_out, (kk, vv) = self._attn_full(x1, p["attn"], positions,
+                                                  return_kv=True)
+                m_out, h_fin, conv_tail = S.mamba_forward(
+                    x1, p["ssm"], state=s_cfg.state, dt_rank=dt_rank,
+                    return_state=True, lowp=c.lowp_attn)
+                s_len = x1.shape[1]
+                cache = {
+                    "k": _ring_cache(kk, s_len, c.sliding_window),
+                    "v": _ring_cache(vv, s_len, c.sliding_window),
+                    "ssm_h": h_fin,
+                    "conv_buf": conv_tail,
+                }
+            else:
+                a_out = self._attn_full(x1, p["attn"], positions)
+                m_out = S.mamba_forward(x1, p["ssm"], state=s_cfg.state,
+                                        dt_rank=dt_rank, lowp=c.lowp_attn)
+            h = h + 0.5 * (a_out + m_out)
+        else:
+            if collect:
+                out, kv = self._attn_full(x1, p["attn"], positions,
+                                          prefix_len=prefix_len,
+                                          return_kv=True)
+                if c.mla:
+                    cache = {"lat": kv[0], "rope": kv[1]}
+                elif c.sliding_window:
+                    s_len = x1.shape[1]
+                    cache = {"k": _ring_cache(kv[0], s_len, c.sliding_window),
+                             "v": _ring_cache(kv[1], s_len, c.sliding_window)}
+                else:
+                    cache = {"k": kv[0], "v": kv[1]}
+                h = h + out
+            else:
+                h = h + self._attn_full(x1, p["attn"], positions,
+                                        prefix_len=prefix_len)
+        if kind == "dec":
+            x2 = _norm(h, p["ln2"], p.get("ln2_b"), nt)
+            h = h + self._attn_full(x2, p["xattn"], None, causal=False,
+                                    kv_override=self._enc_kv(p["xattn"],
+                                                             enc_out))
+            x3 = _norm(h, p["ln3"], p.get("ln3_b"), nt)
+            return h + self._mlp(x3, p["mlp"]), aux, cache
+        x2 = _norm(h, p["ln2"], p.get("ln2_b"), nt)
+        if kind == "moe":
+            y, aux = moe_ffn(x2, p["moe"], c.moe, self.mesh)
+            h = h + y
+        else:
+            h = h + self._mlp(x2, p["mlp"])
+        return h, aux, cache
+
+    def _scan_stack(self, kind, h, stacked, positions, prefix_len=0,
+                    enc_out=None, collect=False):
+        seq_par = (self.cfg.seq_parallel and self.mesh is not None
+                   and "model" in self.mesh.axis_names
+                   and h.shape[1] % self.mesh.shape["model"] == 0)
+
+        def body(carry, layer_params):
+            h, aux = carry
+            if seq_par:  # residual stream lives sequence-sharded
+                h = self._shard_act(h, ("model", None))
+            h2, a, cache = self._block_full(kind, h, layer_params, positions,
+                                            prefix_len, enc_out, collect)
+            if seq_par:
+                h2 = self._shard_act(h2, ("model", None))
+            return (h2, aux + a), cache
+
+        body_fn = jax.checkpoint(body) if self.cfg.remat else body
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        (h, aux), caches = jax.lax.scan(body_fn, (h, jnp.float32(0.0)), stacked,
+                                        unroll=n if self.cfg.scan_unroll else 1)
+        return h, aux, caches
+
+    # ------------------------------------------------------------------
+    # public compute: full forward / loss
+    # ------------------------------------------------------------------
+
+    def forward(self, params, tokens, *, extra_prefix=None, enc_frames=None):
+        """tokens: (B, S) -> logits (B, S_total, V_pad).
+
+        extra_prefix: (B, P, d) precomputed embeddings prepended (vlm stub).
+        enc_frames:   (B, F, d) stub encoder input (whisper).
+        """
+        c = self.cfg
+        h = params["embed"].astype(self.compute_dtype)[tokens]
+        if c.family == "vlm":
+            h = h * jnp.sqrt(jnp.float32(c.d_model)).astype(h.dtype)
+        prefix_len = 0
+        if extra_prefix is not None:
+            h = jnp.concatenate([extra_prefix.astype(h.dtype), h], axis=1)
+            prefix_len = extra_prefix.shape[1]
+        b, s, _ = h.shape
+        h = self._shard_act(h)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if c.pos_embed == "sinusoidal":
+            h = h + _sinusoid(positions, c.d_model).astype(h.dtype)
+
+        enc_out = None
+        if c.family == "encdec":
+            enc_out = self._encode(params, enc_frames)
+
+        aux = jnp.float32(0.0)
+        if c.family == "moe" and c.first_dense_layers:
+            h, a1, _ = self._scan_stack("dense", h, params["dense_layers"],
+                                        positions)
+            aux += a1
+        kind = {
+            "dense": "dense", "vlm": "dense", "moe": "moe",
+            "hybrid": "hybrid", "ssm": "rwkv", "rwkv": "rwkv",
+            "encdec": "dec",
+        }[c.family]
+        h, a2, _ = self._scan_stack(kind, h, params["layers"], positions,
+                                    prefix_len, enc_out)
+        aux += a2
+        h = _norm(h, params["final_norm"], params.get("final_norm_b"),
+                  c.norm_type)
+        head = params["embed"].T if c.tie_embeddings else params["lm_head"]
+        if c.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", h,
+                                params["embed"].astype(h.dtype))
+        else:
+            logits = dense(h, head)
+        logits = self._shard_act(logits, (None, "model")) if logits.shape[-1] % self._model_size() == 0 else logits
+        return logits, aux
+
+    def _encode(self, params, enc_frames):
+        c = self.cfg
+        h = enc_frames.astype(self.compute_dtype)
+        b, f, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(f)[None], (b, f))
+
+        def body(carry, layer_params):
+            hh = carry
+            x1 = _norm(hh, layer_params["ln1"], layer_params.get("ln1_b"),
+                       c.norm_type)
+            hh = hh + self._attn_full(x1, layer_params["attn"], positions,
+                                      causal=False)
+            x2 = _norm(hh, layer_params["ln2"], layer_params.get("ln2_b"),
+                       c.norm_type)
+            hh = hh + self._mlp(x2, layer_params["mlp"])
+            return hh, None
+
+        body_fn = jax.checkpoint(body) if c.remat else body
+        n_enc = jax.tree.leaves(params["enc_layers"])[0].shape[0]
+        h, _ = jax.lax.scan(body_fn, h, params["enc_layers"],
+                            unroll=n_enc if c.scan_unroll else 1)
+        h = layer_norm(h, params["enc_norm"], params["enc_norm_b"])
+        # cross-attention keys/values are computed per decoder layer from h;
+        # return the encoder output and let each layer project it
+        return h
+
+    def prefill(self, params, batch, s_max: Optional[int] = None):
+        """Run the prompt, return (last_logits, caches, lengths).
+
+        Caches match `cache_specs(B, s_max or prompt_len)` and feed straight
+        into `decode_step`.
+        """
+        c = self.cfg
+        tokens = batch["tokens"]
+        h = params["embed"].astype(self.compute_dtype)[tokens]
+        if c.family == "vlm":
+            h = h * jnp.sqrt(jnp.float32(c.d_model)).astype(h.dtype)
+        prefix_len = 0
+        if batch.get("patches") is not None:
+            h = jnp.concatenate([batch["patches"].astype(h.dtype), h], axis=1)
+            prefix_len = batch["patches"].shape[1]
+        b, s, _ = h.shape
+        h = self._shard_act(h)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if c.pos_embed == "sinusoidal":
+            h = h + _sinusoid(positions, c.d_model).astype(h.dtype)
+
+        enc_out = None
+        caches: Dict[str, Any] = {}
+        if c.family == "encdec":
+            enc_out = self._encode(params, batch["enc_frames"])
+            caches["enc_out"] = enc_out
+
+        aux = jnp.float32(0.0)
+        if c.family == "moe" and c.first_dense_layers:
+            h, _, dc = self._scan_stack("dense", h, params["dense_layers"],
+                                        positions, collect=True)
+            if c.mla:
+                caches["d_lat"], caches["d_rope"] = dc["lat"], dc["rope"]
+        kind = {
+            "dense": "dense", "vlm": "dense", "moe": "moe",
+            "hybrid": "hybrid", "ssm": "rwkv", "rwkv": "rwkv",
+            "encdec": "dec",
+        }[c.family]
+        h, _, col = self._scan_stack(kind, h, params["layers"], positions,
+                                     prefix_len, enc_out, collect=True)
+        if col is not None:
+            caches.update(col)
+
+        # quantized KV cache: store at the policy's dtype (e.g. f8)
+        if c.quant is not None and c.quant.kv_cache:
+            cdt = {"e4m3": jnp.float8_e4m3fn,
+                   "e5m2": jnp.float8_e5m2}[c.quant.kv_cache]
+            for k2 in ("k", "v", "lat", "rope", "d_lat", "d_rope"):
+                if k2 in caches:
+                    caches[k2] = caches[k2].astype(cdt)
+
+        # pad sequence-indexed caches out to s_max
+        if s_max is not None and s_max > s:
+            def padseq(name, arr):
+                if name in ("k", "v", "lat", "rope", "d_lat", "d_rope") and \
+                        not (c.sliding_window and name in ("k", "v")):
+                    pad = [(0, 0)] * arr.ndim
+                    pad[2] = (0, s_max - arr.shape[2])
+                    return jnp.pad(arr, pad)
+                return arr
+            caches = {k2: padseq(k2, v2) for k2, v2 in caches.items()}
+
+        h = _norm(h, params["final_norm"], params.get("final_norm_b"),
+                  c.norm_type)
+        last = h[:, -1]
+        if c.tie_embeddings:
+            logits = jnp.einsum("bd,vd->bv", last,
+                                params["embed"].astype(h.dtype))
+        else:
+            logits = dense(last[:, None], params["lm_head"])[:, 0]
+        lengths = jnp.full((b,), s, jnp.int32)
+        return logits, caches, lengths
+
+    def train_loss(self, params, batch):
+        """batch: tokens (B,S), labels (B,S) [+ stub frontend inputs]."""
+        c = self.cfg
+        logits, aux = self.forward(
+            params,
+            batch["tokens"],
+            extra_prefix=batch.get("patches"),
+            enc_frames=batch.get("enc_frames"),
+        )
+        labels = batch["labels"]
+        if "patches" in batch:  # vlm: loss only over the text tail
+            logits = logits[:, -labels.shape[1]:]
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        safe = jnp.clip(labels, 0, lf.shape[-1] - 1)
+        ll = jnp.take_along_axis(lf, safe[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0) & (labels < c.vocab_size)
+        nll = jnp.where(mask, lse - ll, 0.0)
+        loss = nll.sum() / jnp.maximum(mask.sum(), 1)
+        if c.moe is not None:
+            loss = loss + c.moe.router_aux_weight * aux
+        return loss, {"nll": loss, "aux": aux}
+
+    # ------------------------------------------------------------------
+    # serving: cache specs, prefill, decode
+    # ------------------------------------------------------------------
+
+    def cache_specs(self, batch: int, seq: int) -> Dict[str, ParamSpec]:
+        """Decode-state layout (as ParamSpecs; dryrun turns these into
+        ShapeDtypeStructs, serving allocates zeros)."""
+        c = self.cfg
+        dt = self.compute_dtype
+        if c.quant is not None and c.quant.kv_cache:
+            import jax.numpy as _jnp
+            dt = {"e4m3": _jnp.float8_e4m3fn,
+                  "e5m2": _jnp.float8_e5m2}[c.quant.kv_cache]
+        n_layers = c.n_layers - (c.first_dense_layers if c.family == "moe" else 0)
+        kv_seq = min(seq, c.sliding_window) if c.sliding_window else seq
+        caches: Dict[str, Any] = {}
+        if c.family in ("ssm", "rwkv"):
+            h = c.d_model // c.rwkv.head_dim
+            caches["rwkv_state"] = ParamSpec(
+                (c.n_layers, batch, h, c.rwkv.head_dim, c.rwkv.head_dim),
+                ("layers", "act_batch", "heads", None, None), jnp.float32,
+                init="zeros")
+            return caches
+        if c.mla:
+            m = c.mla
+            caches["lat"] = ParamSpec(
+                (n_layers, batch, seq, m.kv_lora),
+                ("layers", "act_batch", "act_kv_seq", None), dt, init="zeros")
+            caches["rope"] = ParamSpec(
+                (n_layers, batch, seq, m.rope_head_dim),
+                ("layers", "act_batch", "act_kv_seq", None), dt, init="zeros")
+        else:
+            kvshape = (n_layers, batch, kv_seq, c.n_kv_heads, c.hd)
+            axes = ("layers", "act_batch", "act_kv_seq", None, None)
+            caches["k"] = ParamSpec(kvshape, axes, dt, init="zeros")
+            caches["v"] = ParamSpec(kvshape, axes, dt, init="zeros")
+        if c.family == "moe" and c.first_dense_layers:
+            nd = c.first_dense_layers
+            if c.mla:
+                caches["d_lat"] = ParamSpec(
+                    (nd, batch, seq, c.mla.kv_lora),
+                    ("layers", "act_batch", "act_kv_seq", None), dt, init="zeros")
+                caches["d_rope"] = ParamSpec(
+                    (nd, batch, seq, c.mla.rope_head_dim),
+                    ("layers", "act_batch", "act_kv_seq", None), dt, init="zeros")
+        if c.family == "hybrid":
+            s_cfg = c.ssm
+            d_inner = s_cfg.expand * c.d_model
+            caches["ssm_h"] = ParamSpec(
+                (c.n_layers, batch, d_inner, s_cfg.state),
+                ("layers", "act_batch", "act_mlp", None), jnp.float32,
+                init="zeros")
+            caches["conv_buf"] = ParamSpec(
+                (c.n_layers, batch, s_cfg.conv_width - 1, d_inner),
+                ("layers", "act_batch", None, "act_mlp"), jnp.float32,
+                init="zeros")
+        if c.family == "encdec":
+            caches["enc_out"] = ParamSpec(
+                (batch, c.encoder.n_frames, c.d_model),
+                ("act_batch", None, None), dt, init="zeros")
+        return caches
+
+    def decode_step(self, params, caches, tokens, lengths):
+        """One token for every sequence. tokens: (B,1); lengths: (B,)."""
+        c = self.cfg
+        h = params["embed"].astype(self.compute_dtype)[tokens]  # (B,1,d)
+        if c.family == "vlm":
+            h = h * jnp.sqrt(jnp.float32(c.d_model)).astype(h.dtype)
+        if c.pos_embed == "sinusoidal":
+            h = h + _sinusoid(lengths[:, None], c.d_model).astype(h.dtype)
+        new_caches = dict(caches)
+        aux_enc = caches.get("enc_out")
+
+        if c.family in ("ssm", "rwkv"):
+            def body(hh, xs):
+                p, state = xs
+                x1 = _norm(hh, p["ln1"], p.get("ln1_b"), c.norm_type)
+                y, state = S.rwkv6_decode_step(x1, state, p["mix"],
+                                               head_dim=c.rwkv.head_dim)
+                hh = hh + y
+                z = _norm(hh, p["ln2"], p.get("ln2_b"), c.norm_type)
+                ffn = p["ffn"]
+                k = jnp.square(jax.nn.relu(dense(z, ffn["w_k"])))
+                hh = hh + jax.nn.sigmoid(dense(z, ffn["w_r"])) * dense(
+                    k, ffn["w_v"])
+                return hh, state
+
+            n_l = params["layers"]["ln1"].shape[0]
+            h, states = jax.lax.scan(body, h,
+                                     (params["layers"], caches["rwkv_state"]),
+                                     unroll=n_l if c.scan_unroll else 1)
+            new_caches["rwkv_state"] = states
+        elif c.family == "hybrid":
+            s_cfg = c.ssm
+            dt_rank = s_cfg.dt_rank or max(c.d_model // 16, 8)
+
+            def body(hh, xs):
+                p, k_c, v_c, h_ssm, conv = xs
+                x1 = _norm(hh, p["ln1"], p.get("ln1_b"), c.norm_type)
+                a_out, k_c, v_c = self._attn_decode(x1, p["attn"], k_c, v_c,
+                                                    lengths)
+                m_out, h_ssm, conv = S.mamba_decode_step(
+                    x1, h_ssm, conv, p["ssm"], state=s_cfg.state,
+                    dt_rank=dt_rank)
+                hh = hh + 0.5 * (a_out + m_out)
+                x2 = _norm(hh, p["ln2"], p.get("ln2_b"), c.norm_type)
+                hh = hh + self._mlp(x2, p["mlp"])
+                return hh, (k_c, v_c, h_ssm, conv)
+
+            n_l = params["layers"]["ln1"].shape[0]
+            h, (ks, vs, hs, convs) = jax.lax.scan(
+                body, h, (params["layers"], caches["k"], caches["v"],
+                          caches["ssm_h"], caches["conv_buf"]),
+                unroll=n_l if c.scan_unroll else 1)
+            new_caches.update({"k": ks, "v": vs, "ssm_h": hs,
+                               "conv_buf": convs})
+        elif c.mla:
+            def body_d(hh, xs):
+                p, c_c, r_c = xs
+                x1 = _norm(hh, p["ln1"], p.get("ln1_b"), c.norm_type)
+                a, c_c, r_c = self._mla_decode(x1, p["attn"], c_c, r_c,
+                                               lengths)
+                hh = hh + a
+                x2 = _norm(hh, p["ln2"], p.get("ln2_b"), c.norm_type)
+                if "moe" in p:
+                    y, _ = moe_ffn(x2, p["moe"], c.moe, self.mesh)
+                    hh = hh + y
+                else:
+                    hh = hh + self._mlp(x2, p["mlp"])
+                return hh, (c_c, r_c)
+
+            if c.family == "moe" and c.first_dense_layers:
+                n_d = params["dense_layers"]["ln1"].shape[0]
+                h, (dc, dr) = jax.lax.scan(
+                    body_d, h, (params["dense_layers"], caches["d_lat"],
+                                caches["d_rope"]),
+                    unroll=n_d if c.scan_unroll else 1)
+                new_caches.update({"d_lat": dc, "d_rope": dr})
+            n_l = params["layers"]["ln1"].shape[0]
+            h, (cc, rr) = jax.lax.scan(
+                body_d, h, (params["layers"], caches["lat"], caches["rope"]),
+                unroll=n_l if c.scan_unroll else 1)
+            new_caches.update({"lat": cc, "rope": rr})
+        else:  # dense / vlm / encdec decoder
+            def body(hh, xs):
+                p, k_c, v_c = xs
+                x1 = _norm(hh, p["ln1"], p.get("ln1_b"), c.norm_type)
+                a, k_c, v_c = self._attn_decode(x1, p["attn"], k_c, v_c,
+                                                lengths)
+                hh = hh + a
+                if "xattn" in p:
+                    x2 = _norm(hh, p["ln2"], p.get("ln2_b"), c.norm_type)
+                    hh = hh + self._attn_full(
+                        x2, p["xattn"], None, causal=False,
+                        kv_override=self._enc_kv(p["xattn"], aux_enc))
+                    x3 = _norm(hh, p["ln3"], p.get("ln3_b"), c.norm_type)
+                    hh = hh + self._mlp(x3, p["mlp"])
+                    return hh, (k_c, v_c)
+                x2 = _norm(hh, p["ln2"], p.get("ln2_b"), c.norm_type)
+                hh = hh + self._mlp(x2, p["mlp"])
+                return hh, (k_c, v_c)
+
+            n_l = params["layers"]["ln1"].shape[0]
+            h, (ks, vs) = jax.lax.scan(body, h,
+                                       (params["layers"], caches["k"],
+                                        caches["v"]),
+                                       unroll=n_l if c.scan_unroll else 1)
+            new_caches.update({"k": ks, "v": vs})
+
+        h = _norm(h, params["final_norm"], params.get("final_norm_b"),
+                  c.norm_type)
+        if c.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", h,
+                                params["embed"].astype(h.dtype))
+        else:
+            logits = dense(h, params["lm_head"])
+        return logits[:, 0], new_caches
+
+    def _enc_kv(self, p, enc_out):
+        c = self.cfg
+        b, f, _ = enc_out.shape
+        k = dense(enc_out, p["wk"], p.get("bk")).reshape(b, f, c.n_kv_heads, c.hd)
+        v = dense(enc_out, p["wv"], p.get("bv")).reshape(b, f, c.n_kv_heads, c.hd)
+        return k, v
+
+    # ------------------------------------------------------------------
+    # input specs (dry-run stand-ins)
+    # ------------------------------------------------------------------
+
+    def input_specs(self, shape: ShapeConfig, mesh: Optional[Mesh] = None):
+        """ShapeDtypeStruct stand-ins for every model input of a cell."""
+        from repro.models.nn import abstract_params
+
+        c = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        mesh = mesh or self.mesh
+        i32 = jnp.int32
+
+        def tok(shp, dt=i32, axes=None):
+            if mesh is None:
+                return jax.ShapeDtypeStruct(shp, dt)
+            from jax.sharding import NamedSharding
+            from repro.models.nn import default_rules, logical_to_spec
+            rules = self.rules or default_rules(mesh)
+            axes = axes or ("act_batch",) + (None,) * (len(shp) - 1)
+            sh = NamedSharding(mesh, logical_to_spec(axes, shp, mesh, rules))
+            return jax.ShapeDtypeStruct(shp, dt, sharding=sh)
+
+        dt = self.compute_dtype
+        if shape.kind == "train":
+            batch = {"tokens": tok((b, s)), "labels": tok((b, s))}
+            if c.family == "vlm":
+                p = c.vision_stub.n_patches
+                batch["tokens"] = tok((b, s - p))
+                batch["labels"] = tok((b, s - p))
+                batch["patches"] = tok((b, p, c.d_model), dt)
+            if c.family == "encdec":
+                batch["enc_frames"] = tok((b, c.encoder.n_frames, c.d_model), dt)
+            return batch
+        if shape.kind == "prefill":
+            batch = {"tokens": tok((b, s))}
+            if c.family == "vlm":
+                p = c.vision_stub.n_patches
+                batch["tokens"] = tok((b, s - p))
+                batch["patches"] = tok((b, p, c.d_model), dt)
+            if c.family == "encdec":
+                batch["enc_frames"] = tok((b, c.encoder.n_frames, c.d_model), dt)
+            return batch
+        # decode
+        caches = abstract_params(self.cache_specs(b, s), mesh, self.rules)
+        return {
+            "tokens": tok((b, 1)),
+            "lengths": tok((b,)),
+            "caches": caches,
+        }

@@ -1,0 +1,150 @@
+"""AdamW with optional FlexiBit-quantized optimizer state.
+
+The paper's thesis — store tensors at the precision they need, bit-packed —
+applies as much to optimizer state as to weights.  `moment_fmt`/`second_fmt`
+store Adam's m/v in arbitrary low-precision formats (int8 for m, e4m3-style
+dynamic-range float for v, à la 8-bit Adam) with per-block scales, using the
+same `core.formats` codecs as the serving path.  At DeepSeek-V3 scale this
+is the difference between optimizer state fitting a pod or not
+(EXPERIMENTS.md §Perf, memory-term hillclimb).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import decode, encode, parse_format
+
+BLOCK = 256  # scale-block length for quantized moments
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_fmt: Optional[str] = None  # e.g. 'int8' — first moment
+    second_fmt: Optional[str] = None  # e.g. 'e4m3' — second moment
+    moment_dtype: str = "float32"  # 'bfloat16': half-width m/v storage
+
+
+# -- blockwise moment quantization ------------------------------------------
+
+
+def _q_moment(x: jax.Array, fmt_name: str):
+    """array -> (codes, scales) with per-BLOCK absmax scaling (flat)."""
+    fmt = parse_format(fmt_name)
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    target = fmt.maxval if hasattr(fmt, "maxval") else float(fmt.qmax)
+    amax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    scale = jnp.where(amax == 0, 1.0, amax / target)
+    codes = encode(blocks / scale, fmt)
+    bits = fmt.bits
+    codes = codes.astype(jnp.uint8 if bits <= 8 else jnp.uint16)
+    return codes, scale[:, 0]
+
+
+def _dq_moment(codes, scales, fmt_name, shape):
+    fmt = parse_format(fmt_name)
+    vals = decode(codes.astype(jnp.uint32), fmt) * scales[:, None]
+    n = 1
+    for d in shape:
+        n *= d
+    return vals.reshape(-1)[:n].reshape(shape)
+
+
+# -- optimizer ----------------------------------------------------------------
+
+
+def init(params, cfg: AdamWConfig):
+    mdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.moment_dtype]
+
+    def zero_like(p):
+        z = jnp.zeros(p.shape, mdt)
+        out = {}
+        if cfg.moment_fmt:
+            c, s = _q_moment(z, cfg.moment_fmt)
+            out["m"] = {"codes": c, "scales": s}
+        else:
+            out["m"] = z
+        if cfg.second_fmt:
+            c, s = _q_moment(z, cfg.second_fmt)
+            out["v"] = {"codes": c, "scales": s}
+        else:
+            out["v"] = z
+        return out
+
+    moments = jax.tree.map(zero_like, params)
+    return {"moments": moments, "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def update(grads, opt_state, params, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, mom):
+        g = g.astype(jnp.float32) * clip
+        m = mom["m"]
+        v = mom["v"]
+        if cfg.moment_fmt:
+            m = _dq_moment(m["codes"], m["scales"], cfg.moment_fmt, p.shape)
+        if cfg.second_fmt:
+            v = _dq_moment(v["codes"], v["scales"], cfg.second_fmt, p.shape)
+        m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        new_mom = {}
+        mdt = {"float32": jnp.float32,
+               "bfloat16": jnp.bfloat16}[cfg.moment_dtype]
+        if cfg.moment_fmt:
+            c, s = _q_moment(m, cfg.moment_fmt)
+            new_mom["m"] = {"codes": c, "scales": s}
+        else:
+            new_mom["m"] = m.astype(mdt)
+        if cfg.second_fmt:
+            c, s = _q_moment(v, cfg.second_fmt)
+            new_mom["v"] = {"codes": c, "scales": s}
+        else:
+            new_mom["v"] = v.astype(mdt)
+        return new_p, new_mom
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = tdef.flatten_up_to(opt_state["moments"])
+    outs = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_moments = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    return (
+        new_params,
+        {"moments": new_moments, "count": count},
+        {"grad_norm": gnorm},
+    )

@@ -1,0 +1,101 @@
+"""Accelerator configurations (paper Table 2) + technology constants.
+
+The absolute energy/area constants are calibration parameters fitted so the
+simulator lands on the paper's *relative* results (§5.3); the structural
+model (dataflow, tiling, bandwidth roofline, PE throughput) is first-
+principles.  See DESIGN.md §Perf-model-calibration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AccelConfig:
+    name: str
+    n_pes: int
+    reg_width: int = 24
+    offchip_gbps: float = 16.0  # GB/s
+    weight_buf_mb: float = 2.0
+    act_buf_mb: float = 1.0
+    noc_gbps: float = 32.0
+    pe_x: int = 32
+    pe_y: int = 32
+    local_buf_kb: float = 0.18
+    freq_ghz: float = 1.0
+
+
+CONFIGS: Dict[str, AccelConfig] = {
+    "Mobile-A": AccelConfig("Mobile-A", 1024, 24, 16.0, 2, 1, 32, 32, 32),
+    "Mobile-B": AccelConfig("Mobile-B", 4096, 24, 16.0, 4, 2, 64, 64, 64),
+    "Cloud-A": AccelConfig("Cloud-A", 8192, 24, 128.0, 16, 8, 128, 128, 64),
+    "Cloud-B": AccelConfig("Cloud-B", 16384, 24, 128.0, 32, 16, 128, 128, 128),
+}
+
+
+# -- energy constants (pJ) — calibrated -------------------------------------
+# MAC energy per bit-product (FlexiBit primitive), DRAM/SRAM per byte.
+E_PRIM_PJ = 0.010          # per primitive bit-AND + tree traversal
+E_MAC16_PJ = 2.2           # fixed FP16 MAC on a TensorCore-like unit
+E_DRAM_PJ_PER_B = 20.0
+E_SRAM_PJ_PER_B = 1.0
+E_NOC_PJ_PER_B = 0.6
+# bit-serial units process one bit-plane per cycle at very low power
+# (fitted to Table 4 energy/EDP ratios)
+E_BITSERIAL_PJ = 0.000123  # per bit-op (Cambricon-P-like in-memory flow)
+E_BITMOD_PJ = 0.031191     # per weight-bit-op (BitMoD lanes with dequant)
+
+# -- area model (mm^2, 15nm-ish) — calibrated to Table 5 / Fig 14 -----------
+# PE module areas as functions of design params (reg_width rw, R_M, L_prim).
+
+
+def pe_area_breakdown(rw: int = 24) -> Dict[str, float]:
+    """FlexiBit PE module areas. At rw=24 the FBRT+PrimGen pair is ~50% of
+    the PE (Fig 14) and the full Mobile-A accelerator lands near Table 5's
+    18.62 mm^2 (1K PEs + buffers + NoC)."""
+    r_m = rw // 2
+    l_prim = r_m * r_m
+    s = 10.04e-6  # global 15nm scale fitted to Table 5 (18.62 mm^2 Mobile-A)
+    sep_xbar = 0.80 * s * rw * (r_m + r_m)    # two crossbars (§3.2)
+    prim_gen = 1.30 * s * l_prim + 0.35 * s * rw * r_m
+    fbrt = 2.45 * s * l_prim                  # tree switches + links
+    fbea = 0.30 * s * l_prim
+    cst = 0.55 * s * l_prim
+    anu = 0.45 * s * l_prim
+    regs = 0.22 * s * (rw * 2 + r_m * 4)
+    base = {
+        "separator": sep_xbar,
+        "prim_gen": prim_gen,
+        "fbrt": fbrt,
+        "fbea": fbea,
+        "cst": cst,
+        "anu": anu,
+        "regs": regs,
+    }
+    wiring = 0.06 * sum(base.values())  # 6% PE routing (§5.3.4)
+    base["pe_wiring"] = wiring
+    return base
+
+
+def pe_area(rw: int = 24) -> float:
+    return sum(pe_area_breakdown(rw).values())
+
+
+def accel_area(cfg: AccelConfig, pe_mm2: float) -> Dict[str, float]:
+    pes = cfg.n_pes * pe_mm2
+    sram = 0.45 * (cfg.weight_buf_mb + cfg.act_buf_mb)  # mm^2 / MB
+    bpu = 0.015 * (1 if cfg.offchip_gbps <= 64 else 2)  # 64b base units
+    ctrl = 0.002 * (pes + sram)
+    routing = 0.12 * (pes + sram)  # same 12% as TensorCore-level (§5.3.4)
+    return {"pes": pes, "sram": sram, "bpu": bpu, "ctrl": ctrl,
+            "routing": routing}
+
+
+# power (mW) per active PE at 1 GHz — calibrated to Table 5
+P_PE_FLEXIBIT_MW = 0.80
+P_PE_TENSORCORE_MW = 0.78
+P_PE_BITFUSION_MW = 0.79
+P_PE_CAMBRICON_MW = 0.112
+P_PE_BITMOD_MW = 0.58

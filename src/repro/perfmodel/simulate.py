@@ -1,0 +1,220 @@
+"""Analytical performance/energy simulator for FlexiBit and baselines.
+
+Models (per GEMM): compute time from per-PE MAC rates, DRAM time from
+weight/activation/output traffic under the better of weight- and output-
+stationary tiling, NoC time; latency = max of the three (double-buffered),
+energy = MAC energy + DRAM/SRAM/NoC traffic energy.
+
+Accelerators:
+  flexibit    — this paper.  PE rate = core.fbrt.ops_per_cycle (bit-exact
+                structural model); storage = exact bit width (BitPacking).
+  tensorcore  — fixed-format units {FP4, FP8, FP16}; non-power-of-two
+                formats are padded to FP16 (paper Fig 1 (c)); mixed-
+                precision operands up-cast to the wider operand.
+  bitfusion   — power-of-two composable (2/4/8/16), FP-extended per §5.1.
+  cambricon   — bit-serial bitflow (Cambricon-P-like): fully bit-serial
+                products, very low power.
+  bitmod      — bit-serial weights x bit-parallel FP16 activations.
+
+Storage/energy constants are calibrated against the paper's reported
+relative results; see tests/test_perfmodel.py for the claims enforced.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.fbrt import PEParams, ops_per_cycle
+from repro.core.formats import FloatFormat, parse_format
+
+from . import hardware as HW
+from .workloads import GEMM, Workload
+
+# the precision sweep of Fig 10/12/13: (act_bits, weight_bits)
+PAIRS: List[Tuple[int, int]] = [
+    (16, 16), (8, 8), (6, 6), (5, 5), (4, 4), (4, 8), (4, 16)]
+
+FMT_OF_BITS = {
+    16: FloatFormat(5, 10, ieee_specials=True),
+    8: FloatFormat(4, 3),
+    6: FloatFormat(2, 3),
+    5: FloatFormat(2, 2),
+    4: FloatFormat(2, 1),
+}
+
+OUT_BITS = 16
+
+# bit-serial calibration (fitted against Table 4 ratios: 52x / 7.9x latency,
+# 2.48 / 2.9 EDP on Llama-2-70b at Cloud-B; see DESIGN.md §Calibration)
+CAMBRICON_LANES = 4.6947
+BITMOD_LANES = 3.9206
+
+
+def _ceil_pow2(b: int) -> int:
+    return 1 << (b - 1).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# per-accelerator storage + rate models
+# ---------------------------------------------------------------------------
+
+
+def storage_bits(accel: str, a_bits: int, w_bits: int,
+                 bitpack: bool = True) -> Tuple[float, float]:
+    if accel == "flexibit":
+        if bitpack:
+            return float(a_bits), float(w_bits)
+        # padded layout: power-of-two aligned containers (Fig 11 ablation)
+        return float(_ceil_pow2(a_bits)), float(_ceil_pow2(w_bits))
+    if accel == "tensorcore":
+        def up(b):
+            return b if b in (4, 8, 16) else 16  # Fig 1 (c): FP6 -> FP16
+        ea, ew = up(a_bits), up(w_bits)
+        e = max(ea, ew)  # no mixed-operand support (GPTQ observation)
+        return float(e), float(e)
+    if accel == "bitfusion":
+        return float(_ceil_pow2(a_bits)), float(_ceil_pow2(w_bits))
+    # bit-serial archs store exact bits
+    return float(a_bits), float(w_bits)
+
+
+def pe_rate(accel: str, a_bits: int, w_bits: int) -> float:
+    """MACs / cycle / PE."""
+    if accel == "flexibit":
+        return float(ops_per_cycle(FMT_OF_BITS[a_bits], FMT_OF_BITS[w_bits]))
+    if accel == "tensorcore":
+        def up(b):
+            return b if b in (4, 8, 16) else 16
+        e = max(up(a_bits), up(w_bits))
+        return {4: 4.0, 8: 2.0, 16: 1.0}[e]
+    if accel == "bitfusion":
+        pa, pw = _ceil_pow2(a_bits), _ceil_pow2(w_bits)
+        return 256.0 / (pa * pw) / 16.0 * 16.0  # FP16 == 1 MAC/cycle
+    if accel == "cambricon":
+        return CAMBRICON_LANES / (a_bits * w_bits)
+    if accel == "bitmod":
+        return BITMOD_LANES / w_bits  # acts bit-parallel, weights serial
+    raise ValueError(accel)
+
+
+def mac_energy_pj(accel: str, a_bits: int, w_bits: int) -> float:
+    fa = FMT_OF_BITS[a_bits]
+    fw = FMT_OF_BITS[w_bits]
+    ovh = 0.35  # datapath + local SRAM per MAC (all bit-parallel archs)
+    if accel == "flexibit":
+        return HW.E_PRIM_PJ * (fa.man_bits + 1) * (fw.man_bits + 1) + ovh
+    if accel == "tensorcore":
+        def up(b):
+            return b if b in (4, 8, 16) else 16
+        e = max(up(a_bits), up(w_bits))
+        return {4: 0.33, 8: 0.62, 16: 1.2}[e] + ovh
+    if accel == "bitfusion":
+        pa, pw = _ceil_pow2(a_bits), _ceil_pow2(w_bits)
+        return 0.0065 * pa * pw + ovh
+    if accel == "cambricon":
+        # in/near-memory bitflow: no operand SRAM shuttling, no wide regs
+        return HW.E_BITSERIAL_PJ * a_bits * w_bits + 0.002
+    if accel == "bitmod":
+        return HW.E_BITMOD_PJ * w_bits + 0.02
+    raise ValueError(accel)
+
+
+# ---------------------------------------------------------------------------
+# dataflow traffic (WS vs OS; §4.2 / §5.3.1)
+# ---------------------------------------------------------------------------
+
+
+def _traffic(cfg: HW.AccelConfig, g: GEMM, a_bytes: float, w_bytes: float,
+             has_weights: bool) -> float:
+    """DRAM bytes for one GEMM under the better of WS and OS tiling."""
+    out_bytes = OUT_BITS / 8
+    wbuf = cfg.weight_buf_mb * 2**20
+    abuf = cfg.act_buf_mb * 2**20
+
+    w_total = g.k * g.n * w_bytes
+    a_total = g.m * g.k * a_bytes
+    o_total = g.m * g.n * out_bytes
+
+    # weight-stationary: weights once; acts re-read per weight tile column
+    tile_n = max(min(g.n, int(wbuf / max(g.k * w_bytes, 1))), 1)
+    ws = w_total + a_total * math.ceil(g.n / tile_n) + o_total
+
+    # output-stationary: acts once; weights re-read per act tile row
+    tile_m = max(min(g.m, int(abuf / max(g.k * a_bytes, 1))), 1)
+    os_ = a_total + w_total * math.ceil(g.m / tile_m) + o_total
+
+    if not has_weights:
+        # attention GEMMs: both operands are activations
+        ws = a_total + w_total + o_total
+        os_ = ws
+    return min(ws, os_) * g.count
+
+
+@dataclasses.dataclass
+class GemmResult:
+    latency_s: float
+    energy_j: float
+    dram_bytes: float
+    macs: int
+    bound: str
+
+
+def run_gemm(accel: str, cfg: HW.AccelConfig, g: GEMM, a_bits: int,
+             w_bits: int, bitpack: bool = True) -> GemmResult:
+    sa, sw = storage_bits(accel, a_bits, w_bits, bitpack)
+    rate = pe_rate(accel, a_bits, w_bits)
+    macs = g.macs
+    freq = cfg.freq_ghz * 1e9
+
+    compute_s = macs / (cfg.n_pes * rate * freq)
+    has_weights = not (g.k == g.m or g.n == g.m)  # heuristic: attn GEMMs
+    dram = _traffic(cfg, g, sa / 8, sw / 8, has_weights)
+    dram_s = dram / (cfg.offchip_gbps * 1e9)
+    noc_s = dram / (cfg.noc_gbps * 1e9)
+
+    lat = max(compute_s, dram_s, noc_s)
+    bound = ("compute" if lat == compute_s
+             else "dram" if lat == dram_s else "noc")
+    energy = (macs * mac_energy_pj(accel, a_bits, w_bits) * 1e-12
+              + dram * HW.E_DRAM_PJ_PER_B * 1e-12
+              + dram * HW.E_NOC_PJ_PER_B * 1e-12)
+    if accel in ("flexibit", "tensorcore", "bitfusion"):
+        # bit-parallel archs shuttle operands through on-chip SRAM per MAC
+        energy += macs * 0.25 * HW.E_SRAM_PJ_PER_B * 1e-12 * (sa + sw) / 16
+    return GemmResult(lat, energy, dram, macs, bound)
+
+
+def run_workload(accel: str, cfg_name: str, wl: Workload, a_bits: int,
+                 w_bits: int, bitpack: bool = True) -> Dict[str, float]:
+    cfg = HW.CONFIGS[cfg_name]
+    lat = en = dram = macs = 0.0
+    for g in wl.gemms():
+        r = run_gemm(accel, cfg, g, a_bits, w_bits, bitpack)
+        lat += r.latency_s
+        en += r.energy_j
+        dram += r.dram_bytes
+        macs += r.macs
+    return {"latency_s": lat, "energy_j": en, "dram_bytes": dram,
+            "macs": macs, "edp": lat * en}
+
+
+def accel_area_mm2(accel: str, cfg_name: str) -> float:
+    cfg = HW.CONFIGS[cfg_name]
+    pe = HW.pe_area(cfg.reg_width)
+    if accel == "tensorcore":
+        pe = pe / 1.005  # paper: FlexiBit needs +0.5% vs TC
+    elif accel == "bitfusion":
+        pe = pe / 1.01  # +1% vs BitFusion
+    elif accel == "cambricon":
+        pe = pe * (5.11 / 18.62)  # Table 5 Mobile-A ratio
+    elif accel == "bitmod":
+        pe = pe * (4.70 / 18.62)
+    return sum(HW.accel_area(cfg, pe).values())
+
+
+def perf_per_area(accel: str, cfg_name: str, wl: Workload, a_bits: int,
+                  w_bits: int) -> float:
+    r = run_workload(accel, cfg_name, wl, a_bits, w_bits)
+    return (1.0 / r["latency_s"]) / accel_area_mm2(accel, cfg_name)

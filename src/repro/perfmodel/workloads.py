@@ -1,0 +1,75 @@
+"""LLM workloads as GEMM lists (paper Table 3, seq = 2048).
+
+Each workload is the per-inference set of (M, K, N, count) GEMMs of a
+decoder forward pass: QKV/out projections, attention score and AV batched
+GEMMs (per head), and the FFN.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class GEMM:
+    m: int
+    k: int
+    n: int
+    count: int = 1
+
+    @property
+    def macs(self) -> int:
+        return self.m * self.k * self.n * self.count
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    name: str
+    seq: int
+    n_layers: int
+    d_model: int
+    d_ff: int
+    n_heads: int
+    n_kv_heads: int
+    gated_ffn: bool = False
+
+    def gemms(self) -> List[GEMM]:
+        s, d, f, l = self.seq, self.d_model, self.d_ff, self.n_layers
+        hd = d // self.n_heads
+        kvd = hd * self.n_kv_heads
+        gs = [
+            GEMM(s, d, d, l),            # Q proj
+            GEMM(s, d, kvd, 2 * l),      # K, V proj
+            GEMM(s, hd, s, self.n_heads * l),   # scores  (per head)
+            GEMM(s, s, hd, self.n_heads * l),   # AV      (per head)
+            GEMM(s, d, d, l),            # out proj
+        ]
+        if self.gated_ffn:
+            gs += [GEMM(s, d, f, 2 * l), GEMM(s, f, d, l)]
+        else:
+            gs += [GEMM(s, d, f, l), GEMM(s, f, d, l)]
+        return gs
+
+    def total_macs(self) -> int:
+        return sum(g.macs for g in self.gemms())
+
+    def weight_elems(self) -> int:
+        """Unique weight parameters touched (for DRAM traffic)."""
+        s = self.seq
+        total = 0
+        for g in self.gemms():
+            if g.k == s or g.n == s:
+                continue  # attention GEMMs: no weights
+            total += g.k * g.n * g.count
+        return total
+
+
+WORKLOADS = {
+    "bert-base": Workload("bert-base", 2048, 12, 768, 3072, 12, 12),
+    "llama2-7b": Workload("llama2-7b", 2048, 32, 4096, 11008, 32, 32,
+                          gated_ffn=True),
+    "llama2-70b": Workload("llama2-70b", 2048, 80, 8192, 28672, 64, 8,
+                           gated_ffn=True),
+    "gpt3": Workload("gpt3", 2048, 96, 12288, 49152, 96, 96),
+}

@@ -1,0 +1,137 @@
+"""Distributed training step factory.
+
+Builds the jitted `train_step(state, batch) -> (state, metrics)` with:
+* FSDP/TP parameter sharding from the spec system (nn.param_shardings),
+* microbatch gradient accumulation via `lax.scan`,
+* remat inside the model (cfg.remat),
+* AdamW (optionally with FlexiBit-quantized moments),
+* optional error-feedback gradient compression,
+* state donation (in-place buffers).
+
+Also owns the TrainState layout used by checkpointing and the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import nn
+from repro.optim import adamw, grad_comp
+from repro.optim.schedule import warmup_cosine
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    opt: adamw.AdamWConfig = adamw.AdamWConfig()
+    grad_compress_fmt: Optional[str] = None  # e.g. 'int8'
+    lr_warmup: int = 200
+    lr_total: int = 10000
+
+
+def init_state(model, key, train_cfg: TrainConfig):
+    params = nn.init_params(model.param_specs(), key)
+    state = {
+        "params": params,
+        "opt": adamw.init(params, train_cfg.opt),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if train_cfg.grad_compress_fmt:
+        state["ef_residual"] = grad_comp.init_residual(params)
+    return state
+
+
+def abstract_state(model, mesh: Optional[Mesh], train_cfg: TrainConfig,
+                   rules=None):
+    """ShapeDtypeStruct TrainState (dry-run / restore planning).
+
+    Moments inherit the parameter sharding (same shapes: ZeRO-style fully
+    sharded optimizer state); quantized-moment layouts are replicated-spec'd
+    abstractly (their memory win is reported analytically in §Perf).
+    """
+    specs = model.param_specs()
+    params = nn.abstract_params(specs, mesh, rules)
+    cfg = train_cfg.opt
+
+    def repl(shape, dtype):
+        sh = NamedSharding(mesh, P()) if mesh is not None else None
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+    def like(p, dtype=jnp.float32):
+        sh = getattr(p, "sharding", None)
+        return jax.ShapeDtypeStruct(p.shape, dtype, sharding=sh)
+
+    if cfg.moment_fmt or cfg.second_fmt:
+        shapes = jax.eval_shape(lambda p: adamw.init(p, cfg), params)
+        opt = jax.tree.map(lambda x: repl(x.shape, x.dtype), shapes)
+    else:
+        mdt = {"float32": jnp.float32,
+               "bfloat16": jnp.bfloat16}[cfg.moment_dtype]
+        moments = jax.tree.map(
+            lambda p: {"m": like(p, mdt), "v": like(p, mdt)}, params)
+        opt = {"moments": moments, "count": repl((), jnp.int32)}
+
+    state = {"params": params, "opt": opt, "step": repl((), jnp.int32)}
+    if train_cfg.grad_compress_fmt:
+        state["ef_residual"] = jax.tree.map(like, params)
+    return state
+
+
+def make_train_step(model, train_cfg: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    n_mb = train_cfg.microbatches
+
+    def loss_fn(params, mb):
+        return model.train_loss(params, mb)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if n_mb == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((n_mb, x.shape[0] // n_mb) + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                return (acc[0] + l,
+                        jax.tree.map(jnp.add, acc[1], g)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, gsum), _ = jax.lax.scan(
+                body, (jnp.float32(0.0), zeros), mbs)
+            loss = loss_sum / n_mb
+            grads = jax.tree.map(lambda g: g / n_mb, gsum)
+            metrics = {"nll": loss}
+
+        new_state = dict(state)
+        if train_cfg.grad_compress_fmt:
+            grads, new_state["ef_residual"] = grad_comp.ef_compress(
+                grads, state["ef_residual"], train_cfg.grad_compress_fmt)
+
+        lr_scale = warmup_cosine(state["step"], warmup=train_cfg.lr_warmup,
+                                 total=train_cfg.lr_total)
+        new_params, new_opt, opt_metrics = adamw.update(
+            grads, state["opt"], params, train_cfg.opt, lr_scale)
+        new_state.update(params=new_params, opt=new_opt,
+                         step=state["step"] + 1)
+        metrics = {"loss": loss, **opt_metrics}
+        return new_state, metrics
+
+    return train_step
+
+
+def jit_train_step(model, mesh: Optional[Mesh], train_cfg: TrainConfig):
+    step = make_train_step(model, train_cfg)
+    return jax.jit(step, donate_argnums=(0,))

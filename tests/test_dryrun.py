@@ -1,0 +1,107 @@
+"""Dry-run machinery tests: HLO collective parsing + one real small-mesh
+cell per step kind (subprocess: needs its own device count)."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_parse_collectives():
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.launch.dryrun import parse_collectives
+
+    hlo = """
+  %ag = f32[1024,512]{1,0} all-gather(%x), replica_groups=[4,2]<=[8], dimensions={0}
+  %ar = bf16[64,64]{1,0} all-reduce(%y), replica_groups=[2,4]<=[8], to_apply=%add
+  %rs = f32[32]{0} reduce-scatter(%z), replica_groups=[1,8]<=[8], dimensions={0}
+  %a2a = (f32[16,16]{1,0}, f32[16,16]{1,0}) all-to-all(%p, %q), replica_groups=[2,4]<=[8]
+  %done = f32[1024,512]{1,0} all-gather-done(%ag)
+"""
+    out = parse_collectives(hlo)
+    by_op = {c["op"]: c for c in out}
+    assert by_op["all-gather"]["result_bytes"] == 1024 * 512 * 4
+    assert by_op["all-gather"]["group_size"] == 2
+    # ring wire bytes: ag (g-1)/g; ar 2(g-1)/g; rs (g-1)
+    assert by_op["all-gather"]["wire_bytes"] == pytest.approx(
+        1024 * 512 * 4 * 0.5)
+    assert by_op["all-reduce"]["wire_bytes"] == pytest.approx(
+        64 * 64 * 2 * 2 * 3 / 4)
+    assert by_op["reduce-scatter"]["wire_bytes"] == pytest.approx(32 * 4 * 7)
+    assert by_op["all-to-all"]["result_bytes"] == 2 * 16 * 16 * 4
+    assert "all-gather-done" not in by_op
+
+
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_dryrun_cell_small_mesh(shape):
+    """Run a full dry-run cell on an 8-device debug mesh in a subprocess;
+    the artifact must contain corrected costs and roofline terms."""
+    with tempfile.TemporaryDirectory() as td:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(ROOT / "src")
+        env["REPRO_DRYRUN_DEVICES"] = "8"
+        env["REPRO_ARTIFACT_DIR"] = td
+        code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from pathlib import Path
+from repro.launch import dryrun
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rec = dryrun.dryrun_cell("qwen1.5-0.5b", "{shape}", False,
+                         mesh=mesh, out_dir=Path({td!r}))
+assert rec["flops_per_device"] > 0
+assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+assert 0 < rec["roofline"]["useful_flops_ratio"] < 3.0, rec["roofline"]
+print("CELL_OK")
+"""
+        p = subprocess.run([sys.executable, "-c", code], env=env,
+                           capture_output=True, text=True, timeout=560,
+                           cwd=str(ROOT))
+        assert p.returncode == 0 and "CELL_OK" in p.stdout, (
+            p.stdout[-2000:] + p.stderr[-2000:])
+        arts = list(Path(td).glob("*.json"))
+        assert len(arts) == 1
+        rec = json.loads(arts[0].read_text())
+        assert rec["collectives"], "no collectives recorded"
+
+
+def test_scan_delta_correction_matches_unrolled_truth():
+    """Methodology check (DESIGN.md §6): corrected = measured + (L-1)*delta
+    must match a fully-unrolled compile of the same model within a few %."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.configs import SHAPES, get_config, reduce_for_smoke
+from repro.configs.base import ShapeConfig
+from repro.launch.dryrun import _compile_cell
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+cfg = reduce_for_smoke(get_config("deepseek-7b")).with_(
+    n_layers=6, remat=False)
+shape = ShapeConfig("t", "train", 64, 8)
+unroll = dict(scan_unroll=True, attn_unroll=True)
+truth = _compile_cell(cfg.with_(**unroll), shape, mesh, "baseline", 1)
+full = _compile_cell(cfg, shape, mesh, "baseline", 1)
+c2 = _compile_cell(cfg.with_(n_layers=2, **unroll), shape, mesh, "baseline", 1)
+c3 = _compile_cell(cfg.with_(n_layers=3, **unroll), shape, mesh, "baseline", 1)
+d = c3["flops"] - c2["flops"]
+corrected = full["flops"] + (cfg.n_layers - 1) * d
+rel = abs(corrected - truth["flops"]) / truth["flops"]
+print("REL", rel)
+assert rel < 0.05, (corrected, truth["flops"], rel)
+print("DELTA_OK")
+"""
+    p = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=560,
+                       cwd=str(ROOT))
+    assert p.returncode == 0 and "DELTA_OK" in p.stdout, (
+        p.stdout[-1500:] + p.stderr[-1500:])

@@ -1,0 +1,229 @@
+"""Bit-exactness tests for the FBRT/FBEA structural emulation (paper §3)."""
+
+from fractions import Fraction
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+from repro.core.fbea import exponent_sum, fbea_control, segmented_add_ints
+from repro.core.fbrt import (
+    FBRT,
+    PEParams,
+    capacity,
+    flexibit_multiply,
+    ops_per_cycle,
+    primitive_schedule,
+    separate,
+    stream_from_codes,
+    with_implicit_ones,
+)
+
+
+# ---------------------------------------------------------------------------
+# Separator (§3.2)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", [F.FloatFormat(2, 3), F.FloatFormat(2, 2), F.FloatFormat(4, 3)])
+def test_separator_routes_fields(fmt):
+    rng = np.random.default_rng(fmt.bits)
+    n = PEParams().reg_width // fmt.bits
+    codes = rng.integers(0, 2**fmt.bits, size=n).tolist()
+    signs, exps, mants = separate(stream_from_codes(codes, fmt), fmt)
+    for c, s, e, m in zip(codes, signs, exps, mants):
+        assert s == (c >> (fmt.exp_bits + fmt.man_bits)) & 1
+        assert e == (c >> fmt.man_bits) & ((1 << fmt.exp_bits) - 1)
+        assert m == c & ((1 << fmt.man_bits) - 1)
+
+
+# ---------------------------------------------------------------------------
+# Primitive generator (§3.3)
+# ---------------------------------------------------------------------------
+
+
+def test_primitive_schedule_fp6_fp5_walkthrough():
+    """Fig 3 walk-through: FP6(e2m3) act x FP5(e2m2) wgt."""
+    sched = primitive_schedule(3, 2)
+    # per-op primitives contiguous, 6 each; capacity limited to 24 ops
+    assert capacity(3, 2) == 24
+    used = [p for p in sched if p is not None]
+    assert len(used) == 24 * 6  # every leaf of L_prim=144 busy
+    first_op = used[:6]
+    assert [(p.wgt_bit, p.act_bit) for p in first_op] == [
+        (0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2),
+    ]
+    assert all(p.oid == 0 for p in first_op)
+
+
+def test_capacity_limits():
+    # FP16xFP16 mantissas (10x10): one op, limited by mantissa registers
+    assert capacity(10, 10) == 1
+    # e2m3 x e2m3: 16 ops fill L_prim exactly (16 * 9 = 144)
+    assert capacity(3, 3) == 16
+
+
+# ---------------------------------------------------------------------------
+# FBRT (§3.4)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    ma=st.integers(1, 10),
+    mw=st.integers(1, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=80, deadline=None)
+def test_fbrt_products_exact(ma, mw, seed):
+    """Tree output == exact integer product A*W for every op in flight."""
+    params = PEParams()
+    tree = FBRT(ma, mw, params)
+    rng = np.random.default_rng(seed)
+    n_a = params.r_m // ma
+    n_w = params.r_m // mw
+    acts = rng.integers(0, 2**ma, size=max(n_a, 1)).tolist()
+    wgts = rng.integers(0, 2**mw, size=max(n_w, 1)).tolist()
+    outs = tree(acts, wgts)
+    assert len(outs) == tree.capacity
+    num_acts = max(params.r_m // ma, 1)
+    for oid, v in outs.items():
+        a = acts[oid % num_acts]
+        w = wgts[oid // num_acts]
+        assert v == a * w, f"oid={oid}: {v} != {a}*{w}"
+
+
+def test_fbrt_uses_additional_links_and_modes():
+    """The FP6xFP5 example exercises concat, add and distribute modes."""
+    tree = FBRT(3, 2)
+    rng = np.random.default_rng(0)
+    acts = rng.integers(0, 8, size=4).tolist()
+    wgts = rng.integers(0, 4, size=6).tolist()
+    tree(acts, wgts)
+    mc = tree.mode_counts
+    assert mc["C2"] > 0, "concat mode never used"
+    assert mc["A2"] + mc["A3"] + mc["CA"] > 0, "no additions performed"
+    assert mc["D"] > 0, "additional (neighbor) links never used"
+
+
+def test_fbrt_completion_spread_across_levels():
+    """Small ops complete low in the tree (bit-parallel outputs at many
+    levels simultaneously, Fig 3 (d))."""
+    tree = FBRT(2, 2)
+    acts = [3, 3, 3, 3, 3, 3]
+    wgts = [3, 3, 3, 3, 3, 3]
+    tree(acts, wgts)
+    levels = set(tree.completion_levels.values())
+    assert min(levels) <= 3
+    assert len(tree.completion_levels) == tree.capacity
+
+
+# ---------------------------------------------------------------------------
+# implicit 1 (Fig 5)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    ma=st.integers(0, 10),
+    mw=st.integers(0, 10),
+    seed=st.integers(0, 2**31 - 1),
+    a_n=st.booleans(),
+    w_n=st.booleans(),
+)
+@settings(max_examples=80, deadline=None)
+def test_implicit_one_correction(ma, mw, seed, a_n, w_n):
+    rng = np.random.default_rng(seed)
+    a = int(rng.integers(0, 2**ma)) if ma else 0
+    w = int(rng.integers(0, 2**mw)) if mw else 0
+    full = with_implicit_ones(a * w, a, w, ma, mw, a_n, w_n)
+    expect = (a + (1 << ma) * a_n) * (w + (1 << mw) * w_n)
+    assert full == expect
+
+
+# ---------------------------------------------------------------------------
+# FBEA (§3.5)
+# ---------------------------------------------------------------------------
+
+
+def test_fbea_control_word():
+    assert fbea_control(3, 9) == [0, 0, 1, 0, 0, 1, 0, 0, 1]
+
+
+@given(
+    width=st.integers(2, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=60, deadline=None)
+def test_segmented_adder_many_parallel_adds(width, seed):
+    rng = np.random.default_rng(seed)
+    count = 144 // width
+    a = rng.integers(0, 2**width, size=count).tolist()
+    b = rng.integers(0, 2**width, size=count).tolist()
+    got = segmented_add_ints(a, b, width)
+    want = [(x + y) % (1 << width) for x, y in zip(a, b)]
+    assert got == want
+
+
+def test_exponent_sum_signed():
+    f6 = F.FloatFormat(3, 2)  # bias 3
+    f5 = F.FloatFormat(2, 2)  # bias 1
+    assert exponent_sum(1, 1, f6, f5) == 1 + 1 - 3 - 1
+    assert exponent_sum(7, 3, f6, f5) == 7 + 3 - 4
+
+
+# ---------------------------------------------------------------------------
+# full PE multiply: equals exact FP arithmetic
+# ---------------------------------------------------------------------------
+
+
+@given(
+    ea=st.integers(1, 5),
+    mma=st.integers(0, 8),
+    ew=st.integers(1, 5),
+    mmw=st.integers(0, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=100, deadline=None)
+def test_flexibit_multiply_bit_exact(ea, mma, ew, mmw, seed):
+    fmt_a = F.FloatFormat(ea, mma)
+    fmt_w = F.FloatFormat(ew, mmw)
+    params = PEParams()
+    n_a = params.reg_width // fmt_a.bits
+    n_w = params.reg_width // fmt_w.bits
+    rng = np.random.default_rng(seed)
+    codes_a = rng.integers(0, 2**fmt_a.bits, size=n_a).tolist()
+    codes_w = rng.integers(0, 2**fmt_w.bits, size=n_w).tolist()
+    import jax.numpy as jnp
+
+    vals_a = [Fraction(float(F.decode(jnp.uint32(c), fmt_a))) for c in codes_a]
+    vals_w = [Fraction(float(F.decode(jnp.uint32(c), fmt_w))) for c in codes_w]
+
+    results = flexibit_multiply(codes_a, codes_w, fmt_a, fmt_w, params)
+    assert results, "PE produced no outputs"
+    for ai, wi, sign, sig, exp2 in results:
+        got = Fraction(sig) * Fraction(2) ** exp2 * (-1 if sign else 1)
+        want = vals_a[ai] * vals_w[wi]
+        if want == 0:
+            # signed zero: the magnitude must be exactly zero
+            assert sig == 0
+        else:
+            assert got == want, f"op ({ai},{wi}): {got} != {want}"
+
+
+# ---------------------------------------------------------------------------
+# PE throughput model (feeds the performance simulator)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "fa,fw,expected",
+    [
+        (F.FP16, F.FP16, 1),  # paper: "minor improvements for FP16"
+        (F.FP6_E2M3, F.FP6_E2M3, 16),  # 16 ops fill L_prim: 100% utilization
+        (F.FP8_E4M3, F.FP8_E4M3, 9),  # reg_width-bound
+        (F.FP4_E2M1, F.FP4_E2M1, 36),
+        (F.FP6_E2M3, F.FP5_E2M2, 16),  # Fig 3 walk-through pair (reg-bound)
+    ],
+)
+def test_ops_per_cycle(fa, fw, expected):
+    assert ops_per_cycle(fa, fw) == expected

@@ -1,0 +1,84 @@
+"""QTensor + arbitrary-precision GEMM reference-path tests."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats as F
+from repro.core import flexgemm as G
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * scale)
+
+
+@pytest.mark.parametrize(
+    "fmt,mode",
+    [
+        ("e2m3", "none"),
+        ("e3m2", "none"),
+        ("e2m2", "channel"),
+        ("e4m3", "channel"),
+        ("e2m1", "block"),
+        ("int4", "channel"),
+        ("int8", "block"),
+    ],
+)
+def test_quantize_dequantize_error_bounded(fmt, mode):
+    w = _rand((64, 96), seed=3)
+    qt = G.quantize_tensor(w, fmt, scale_mode=mode, block=32)
+    back = G.dequantize(qt)
+    fmt_p = F.parse_format(fmt)
+    if isinstance(fmt_p, F.FloatFormat):
+        # relative error bounded by half-ulp of the mantissa (+ headroom for
+        # block pow2 scales) for values inside the representable range
+        rel = 2.0 ** (-fmt_p.man_bits - 1) * (2.0 if mode == "block" else 1.0)
+        mask = np.abs(np.asarray(w)) <= fmt_p.maxval * 0.9
+        err = np.abs(np.asarray(back) - np.asarray(w))
+        lim = rel * np.maximum(np.abs(np.asarray(w)), 2.0 ** fmt_p.min_unbiased_exp)
+        assert np.all(err[mask] <= lim[mask] + 1e-7)
+    else:
+        # INT: error bounded by half a quantization step per channel/block
+        err = np.abs(np.asarray(back) - np.asarray(w))
+        assert err.max() < np.abs(np.asarray(w)).max() / (2 ** (fmt_p.bits - 1)) * 1.01
+
+
+def test_packed_density():
+    w = _rand((128, 128))
+    qt = G.quantize_tensor(w, "e2m3", scale_mode="none")
+    assert qt.packed.dtype == jnp.uint32
+    assert qt.memory_bits() == 128 * 128 * 6  # exactly 6 bits/element
+    qt4 = G.quantize_tensor(w, "e2m1", scale_mode="none")
+    assert qt4.memory_bits() == 128 * 128 * 4
+
+
+@pytest.mark.parametrize("fmt", ["e2m3", "e3m2", "e4m3", "e5m2"])
+def test_matmul_matches_dequant_dot(fmt):
+    x = _rand((8, 64), seed=1)
+    w = _rand((64, 96), seed=2)
+    qt = G.quantize_tensor(w, fmt, scale_mode="none")
+    got = G.matmul(x, qt)
+    want = jnp.matmul(x, G.dequantize(qt))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_matmul_quantization_error_shrinks_with_precision():
+    """More mantissa bits -> closer to the fp32 product (sanity on ordering)."""
+    x = _rand((16, 128), seed=5)
+    w = _rand((128, 128), seed=6, scale=0.5)
+    exact = np.asarray(jnp.matmul(x, w))
+    errs = []
+    for fmt in ["e2m1", "e2m3", "e4m3", "e5m10"]:
+        qt = G.quantize_tensor(w, fmt, scale_mode="channel")
+        got = np.asarray(G.matmul(x, qt))
+        errs.append(np.abs(got - exact).mean())
+    assert errs[0] > errs[1] > errs[2] > errs[3]
+
+
+def test_mx_block_format_roundtrip_pow2_scales():
+    w = _rand((128, 64), seed=7, scale=3.0)
+    qt = G.quantize_tensor(w, "e2m3", scale_mode="block", block=32, scale_kind="e8m0")
+    s = np.asarray(qt.scales)
+    np.testing.assert_array_equal(np.exp2(np.round(np.log2(s))), s)
+    assert s.shape == (128 // 32, 64)

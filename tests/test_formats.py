@@ -1,0 +1,138 @@
+"""Unit + property tests for arbitrary-precision format codecs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+
+
+def _all_codes(fmt):
+    return jnp.arange(2**fmt.bits, dtype=jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# exact round-trips
+# ---------------------------------------------------------------------------
+
+FMTS = [
+    F.FloatFormat(2, 1),
+    F.FloatFormat(2, 2),
+    F.FloatFormat(2, 3),
+    F.FloatFormat(3, 2),
+    F.FloatFormat(3, 0),  # e3m0 from FP4-LLM's format sweep
+    F.FloatFormat(1, 2),
+    F.FloatFormat(4, 3),
+    F.FloatFormat(5, 2),
+    F.FloatFormat(5, 10, ieee_specials=True),  # fp16
+    F.FloatFormat(8, 7, ieee_specials=True),  # bf16
+    F.FloatFormat(6, 9),  # deliberately weird
+]
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=lambda f: f.name)
+def test_decode_encode_identity_on_all_codes(fmt):
+    """encode(decode(c)) == c for every representable code (canonical ones)."""
+    codes = _all_codes(fmt)
+    vals = F.decode(codes, fmt)
+    finite = np.isfinite(np.asarray(vals))
+    back = F.encode(vals, fmt)
+    codes_np, back_np = np.asarray(codes), np.asarray(back)
+    # -0.0 decodes to -0.0 and re-encodes to the signed zero code; all finite
+    # codes must round-trip exactly.
+    np.testing.assert_array_equal(back_np[finite], codes_np[finite])
+
+
+@pytest.mark.parametrize("fmt", FMTS[:8], ids=lambda f: f.name)
+def test_quantize_is_nearest_even(fmt):
+    """Quantization picks the nearest representable value (ties to even)."""
+    codes = _all_codes(fmt)
+    vals = np.sort(np.unique(np.asarray(F.decode(codes, fmt), dtype=np.float64)))
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-fmt.maxval * 1.5, fmt.maxval * 1.5, size=4096).astype(np.float32)
+    q = np.asarray(F.quantize(jnp.asarray(x), fmt), dtype=np.float64)
+    # brute-force nearest representable
+    d = np.abs(vals[None, :] - x.astype(np.float64)[:, None])
+    nearest = d.min(axis=1)
+    got = np.abs(q - x.astype(np.float64))
+    # quantized error must equal the true nearest distance (ties allowed)
+    np.testing.assert_allclose(got, nearest, rtol=0, atol=1e-12)
+
+
+@pytest.mark.parametrize("fmt", FMTS[:8], ids=lambda f: f.name)
+def test_saturation_and_zero(fmt):
+    big = jnp.asarray([1e30, -1e30, 0.0, -0.0], dtype=jnp.float32)
+    q = np.asarray(F.quantize(big, fmt))
+    assert q[0] == pytest.approx(fmt.maxval)
+    assert q[1] == pytest.approx(-fmt.maxval)
+    assert q[2] == 0.0 and q[3] == 0.0
+
+
+def test_fp16_matches_ieee():
+    """Our e5m10 codec must agree with numpy's float16 for finite values."""
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal(8192).astype(np.float32) * 100
+    ours = np.asarray(F.quantize(jnp.asarray(x), F.FP16))
+    theirs = x.astype(np.float16).astype(np.float32)
+    np.testing.assert_array_equal(ours, theirs)
+
+
+def test_bf16_matches_jax():
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal(8192).astype(np.float32) * 1e4
+    ours = np.asarray(F.quantize(jnp.asarray(x), F.BF16))
+    theirs = np.asarray(jnp.asarray(x).astype(jnp.bfloat16).astype(jnp.float32))
+    np.testing.assert_array_equal(ours, theirs)
+
+
+@given(
+    e=st.integers(1, 7),
+    m=st.integers(0, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=60, deadline=None)
+def test_property_roundtrip_random_formats(e, m, seed):
+    """decode∘encode is idempotent (a projection) for any ExMy format."""
+    fmt = F.FloatFormat(e, m)
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(256).astype(np.float32) * rng.uniform(1e-3, 1e3)
+    q1 = F.quantize(jnp.asarray(x), fmt)
+    q2 = F.quantize(q1, fmt)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+def test_int_format_roundtrip():
+    fmt = F.IntFormat(4)
+    x = jnp.arange(-8, 8, dtype=jnp.float32)
+    codes = F.encode(x, fmt)
+    assert int(codes.min()) >= 0 and int(codes.max()) < 16
+    back = F.decode(codes, fmt)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_parse_format():
+    assert F.parse_format("e3m2") == F.FloatFormat(3, 2)
+    assert F.parse_format("int8") == F.IntFormat(8)
+    assert F.parse_format("fp16").man_bits == 10
+    assert F.parse_format(F.FP6_E2M3) is F.FP6_E2M3
+
+
+def test_fake_quant_gradient_is_straight_through():
+    x = jnp.linspace(-2, 2, 64)
+    g = jax.grad(lambda v: jnp.sum(F.fake_quant(v, 2, 3)))(x)
+    np.testing.assert_array_equal(np.asarray(g), np.ones(64, np.float32))
+
+
+def test_block_scales_mx_power_of_two():
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32)) * 7.3
+    spec = F.BlockScaleSpec(32, "e8m0")
+    s = F.compute_block_scales(w, F.FP6_E2M3, spec, axis=0)
+    s_np = np.asarray(s)
+    # every scale is a power of two
+    np.testing.assert_array_equal(np.exp2(np.round(np.log2(s_np))), s_np)
+    # scaling down never saturates the format
+    scaled = np.asarray(F.apply_block_scale(w, s, spec, axis=0, inverse=False))
+    assert np.abs(scaled).max() <= F.FP6_E2M3.maxval + 1e-6

@@ -1,0 +1,157 @@
+"""Packed dequant-fused matmul kernel: interpret-mode sweep vs the jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import flexgemm as G
+from repro.core import formats as F
+from repro.kernels import ops
+from repro.kernels.packed_matmul import decode_codes_jnp, packed_matmul_pallas
+from repro.kernels.ref import packed_matmul_ref
+
+
+def _rand(shape, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# in-kernel decode == library decode for every code of every format
+# ---------------------------------------------------------------------------
+
+DECODE_FMTS = ["e2m1", "e2m2", "e2m3", "e3m2", "e4m3", "e5m2", "e1m2", "e3m0",
+               "e8m7", "int4", "int8"]
+
+
+@pytest.mark.parametrize("fmt", DECODE_FMTS)
+def test_kernel_decode_matches_library(fmt):
+    fmt_p = F.parse_format(fmt)
+    codes = jnp.arange(2**fmt_p.bits, dtype=jnp.uint32)
+    got = np.asarray(decode_codes_jnp(codes, fmt_p))
+    want = np.asarray(F.decode(codes, fmt_p))
+    finite = np.isfinite(want)
+    np.testing.assert_array_equal(got[finite], want[finite])
+
+
+# ---------------------------------------------------------------------------
+# full kernel sweep: shapes x dtypes x formats x scale modes
+# ---------------------------------------------------------------------------
+
+SWEEP = [
+    # (M, K, N, fmt, scale_mode, x_dtype)
+    (128, 128, 256, "e2m3", "none", jnp.float32),
+    (128, 256, 128, "e3m2", "none", jnp.float32),
+    (64, 128, 512, "e2m1", "none", jnp.bfloat16),
+    (128, 128, 256, "e4m3", "channel", jnp.float32),
+    (32, 128, 128, "e5m2", "channel", jnp.bfloat16),
+    (128, 128, 256, "e2m3", "block", jnp.float32),
+    (16, 256, 256, "int4", "channel", jnp.float32),
+    (128, 128, 128, "int8", "block", jnp.float32),
+    (8, 128, 96, "e2m2", "none", jnp.float32),  # N=96: group-size tiles
+    (1, 128, 256, "e2m3", "none", jnp.float32),  # GEMV (decode step shape)
+    (200, 384, 160, "e3m2", "channel", jnp.float32),  # ragged M, odd N
+]
+
+
+@pytest.mark.parametrize("M,K,N,fmt,mode,dtype", SWEEP)
+def test_kernel_vs_ref(M, K, N, fmt, mode, dtype):
+    x = _rand((M, K), seed=M + N, dtype=dtype)
+    w = _rand((K, N), seed=K, dtype=jnp.float32) * 0.5
+    qt = G.quantize_tensor(w, fmt, scale_mode=mode, block=32)
+    got = ops.packed_matmul(x, qt, interpret=True)
+    want = packed_matmul_ref(
+        x, qt.packed, qt.scales, fmt_name=F.parse_format(fmt).name,
+        scale_mode=mode, scale_block=qt.block,
+    )
+    rtol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=rtol, atol=1e-3,
+    )
+
+
+def test_kernel_vs_dequant_matmul_end_to_end():
+    """Kernel path == dequantize-then-matmul within fp32 reassociation."""
+    x = _rand((64, 256), seed=1)
+    w = _rand((256, 384), seed=2) * 0.3
+    qt = G.quantize_tensor(w, "e2m3", scale_mode="channel")
+    got = np.asarray(ops.packed_matmul(x, qt, interpret=True))
+    want = np.asarray(jnp.dot(x, G.dequantize(qt)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    e=st.integers(1, 5),
+    m=st.integers(0, 6),
+    logm=st.integers(3, 7),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=12, deadline=None)
+def test_property_kernel_matches_ref_random_formats(e, m, logm, seed):
+    fmt = F.FloatFormat(e, m)
+    M = 2**logm
+    K, N = 128, 128
+    x = _rand((M, K), seed=seed)
+    w = _rand((K, N), seed=seed + 1) * 0.4
+    qt = G.quantize_tensor(w, fmt, scale_mode="channel")
+    got = ops.packed_matmul(x, qt, interpret=True)
+    want = packed_matmul_ref(
+        x, qt.packed, qt.scales, fmt_name=fmt.name,
+        scale_mode="channel", scale_block=qt.block,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4
+    )
+
+
+def test_batched_input_shapes():
+    x = _rand((4, 8, 128), seed=9)
+    w = _rand((128, 256), seed=10)
+    qt = G.quantize_tensor(w, "e2m3", scale_mode="none")
+    got = ops.packed_matmul(x, qt, interpret=True)
+    assert got.shape == (4, 8, 256)
+    want = jnp.einsum("abk,kn->abn", x, G.dequantize(qt))
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused quantize+pack kernel
+# ---------------------------------------------------------------------------
+
+QP_FMTS = ["e2m1", "e2m3", "e3m2", "e4m3", "e5m2", "e2m2"]
+
+
+@pytest.mark.parametrize("fmt", QP_FMTS)
+def test_quantize_pack_kernel_matches_library(fmt):
+    from repro.core import bitpack
+    from repro.kernels.quant_pack import quantize_pack_pallas
+
+    fmt_p = F.parse_format(fmt)
+    rng = np.random.default_rng(hash(fmt) % 2**31)
+    g = bitpack.group_size(fmt_p.bits)
+    n = g * 8
+    x = jnp.asarray(rng.standard_normal((64, n)).astype(np.float32) * 2)
+    got = quantize_pack_pallas(x, fmt_name=fmt, interpret=True)
+    want = bitpack.pack_codes(F.encode(x, fmt_p), fmt_p.bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(e=st.integers(1, 5), m=st.integers(0, 5),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_property_quantize_pack_random_formats(e, m, seed):
+    from repro.core import bitpack
+    from repro.kernels.quant_pack import quantize_pack_pallas
+
+    fmt = F.FloatFormat(e, m)
+    g = bitpack.group_size(fmt.bits)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((16, g * 4)).astype(np.float32))
+    got = quantize_pack_pallas(x, fmt_name=fmt.name, interpret=True)
+    want = bitpack.pack_codes(F.encode(x, fmt), fmt.bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

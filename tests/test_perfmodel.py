@@ -1,0 +1,160 @@
+"""Paper-claim validation for the performance model (EXPERIMENTS.md §Paper).
+
+Bands are deliberately generous where our baseline assumptions differ from
+the paper's (documented in DESIGN.md §Calibration); near-exact where we
+calibrated directly (Table 4 bit-serial ratios)."""
+
+import numpy as np
+import pytest
+
+from repro.perfmodel import hardware as HW
+from repro.perfmodel.simulate import (
+    PAIRS,
+    accel_area_mm2,
+    perf_per_area,
+    run_workload,
+)
+from repro.perfmodel.workloads import WORKLOADS
+
+CONFIGS = ["Mobile-A", "Mobile-B", "Cloud-A", "Cloud-B"]
+
+
+def _avg_ratio(acc_a, acc_b, a, w, metric="latency_s"):
+    rs = []
+    for c in CONFIGS:
+        for wl in WORKLOADS.values():
+            ra = run_workload(acc_a, c, wl, a, w)[metric]
+            rb = run_workload(acc_b, c, wl, a, w)[metric]
+            rs.append(ra / rb)
+    return float(np.mean(rs))
+
+
+def test_fp16_parity_with_tensorcore():
+    """Paper: 'minor improvements for FP16-based models'."""
+    r = _avg_ratio("flexibit", "tensorcore", 16, 16)
+    assert 0.9 <= r <= 1.1, r
+
+
+def test_fp6_latency_reduction_vs_tensorcore():
+    """Paper: 59% less latency at FP6 (ours: ~75%, TC pads FP6->FP16)."""
+    r = _avg_ratio("flexibit", "tensorcore", 6, 6)
+    assert 1 - r >= 0.45, f"only {1-r:.0%} reduction"
+
+
+def test_fp6_latency_reduction_vs_bitfusion():
+    """Paper: 31% less latency vs Bit-Fusion at FP6 (ours ~36%)."""
+    r = _avg_ratio("flexibit", "bitfusion", 6, 6)
+    assert 0.25 <= 1 - r <= 0.45, f"{1-r:.0%}"
+
+
+def test_fp6_energy_reduction():
+    """Paper: 66% / 33% less energy vs TC / BitFusion."""
+    r_tc = _avg_ratio("flexibit", "tensorcore", 6, 6, "energy_j")
+    r_bf = _avg_ratio("flexibit", "bitfusion", 6, 6, "energy_j")
+    assert 1 - r_tc >= 0.45, f"vs TC only {1-r_tc:.0%}"
+    assert 0.2 <= 1 - r_bf <= 0.5, f"vs BF {1-r_bf:.0%}"
+
+
+def test_gpt3_fp6_perf_per_area():
+    """Abstract: 1.66x / 1.62x on GPT-3 FP6 (cloud scale).  Ours exceeds
+    the TC figure (documented deviation); the BitFusion figure is close."""
+    wl = WORKLOADS["gpt3"]
+    fb = perf_per_area("flexibit", "Cloud-B", wl, 6, 6)
+    tc = perf_per_area("tensorcore", "Cloud-B", wl, 6, 6)
+    bf = perf_per_area("bitfusion", "Cloud-B", wl, 6, 6)
+    assert fb / tc >= 1.6
+    assert 1.4 <= fb / bf <= 2.2
+
+
+def test_pow2_cases_tensorcore_competitive():
+    """Paper Fig 12: TC is close at [8,8]/[4,4], far behind at [6,6]/[5,5].
+
+    Our structural FBRT throughput model (derived exactly from Code 1-3 +
+    Table 1) is *more* optimistic at FP8 than the paper's own Fig 12, so we
+    assert the qualitative ordering: TC's deficit at power-of-two pairs is
+    several times smaller than at non-power-of-two pairs (documented
+    deviation, EXPERIMENTS.md §Paper-claims)."""
+    wl = WORKLOADS["llama2-7b"]
+
+    def ratio(a, w):
+        fb = perf_per_area("flexibit", "Cloud-B", wl, a, w)
+        tc = perf_per_area("tensorcore", "Cloud-B", wl, a, w)
+        return tc / fb
+
+    pow2 = min(ratio(8, 8), ratio(4, 4))
+    npow2 = max(ratio(6, 6), ratio(5, 5))
+    assert pow2 >= 0.4, f"TC unreasonably bad at pow2: {pow2:.2f}"
+    assert pow2 >= 2.0 * npow2, (pow2, npow2)
+
+
+def test_bitserial_table4_ratios():
+    """Calibrated near-exact: 52x / 7.9x latency; 2.48x / 2.9x EDP."""
+    wl = WORKLOADS["llama2-70b"]
+
+    def avg(acc):
+        ls, es = [], []
+        for (a, w) in PAIRS:
+            r = run_workload(acc, "Cloud-B", wl, a, w)
+            ls.append(r["latency_s"])
+            es.append(r["energy_j"])
+        return float(np.mean(ls)), float(np.mean(es))
+
+    fb, cp, bm = avg("flexibit"), avg("cambricon"), avg("bitmod")
+    assert 52 * 0.8 <= cp[0] / fb[0] <= 52 * 1.2
+    assert 7.9 * 0.8 <= bm[0] / fb[0] <= 7.9 * 1.2
+    assert 2.48 * 0.75 <= (cp[0] * cp[1]) / (fb[0] * fb[1]) <= 2.48 * 1.25
+    assert 2.9 * 0.75 <= (bm[0] * bm[1]) / (fb[0] * fb[1]) <= 2.9 * 1.25
+    # BitMod is ~2.7x more energy-efficient than FlexiBit
+    assert 2.0 <= fb[1] / bm[1] <= 3.5
+
+
+def test_bitpacking_ablation():
+    """Paper Fig 11: ~26% average latency gain from BitPacking (ours ~19%
+    with power-of-two padded containers)."""
+    rs = []
+    for c in CONFIGS:
+        for wl in WORKLOADS.values():
+            for (a, w) in [(6, 6), (5, 5), (4, 4)]:
+                on = run_workload("flexibit", c, wl, a, w, True)["latency_s"]
+                off = run_workload("flexibit", c, wl, a, w, False)["latency_s"]
+                rs.append(1 - on / off)
+    assert np.mean(rs) >= 0.15, np.mean(rs)
+
+
+def test_area_model_table5():
+    assert abs(accel_area_mm2("flexibit", "Mobile-A") - 18.62) / 18.62 < 0.15
+    assert abs(accel_area_mm2("cambricon", "Mobile-A") - 5.11) / 5.11 < 0.3
+    assert abs(accel_area_mm2("bitmod", "Mobile-A") - 4.70) / 4.70 < 0.3
+
+
+def test_pe_area_structure():
+    """Fig 14: FBRT + Primitive Generator ~= half the PE; FlexiBit costs
+    only ~0.5% / 1% more than TC / BitFusion PEs (by construction)."""
+    bd = HW.pe_area_breakdown(24)
+    frac = (bd["fbrt"] + bd["prim_gen"]) / sum(bd.values())
+    assert 0.4 <= frac <= 0.6, frac
+
+
+def test_reg_width_24_is_sweet_spot():
+    """Fig 14 (a): throughput-per-area peaks at reg_width = 24."""
+    from repro.core.fbrt import PEParams, ops_per_cycle
+    from repro.core.formats import FloatFormat
+    f6 = FloatFormat(2, 3)
+
+    def tpa(rw):
+        p = PEParams(reg_width=rw, r_m=rw // 2, l_prim=(rw // 2) ** 2)
+        return ops_per_cycle(f6, f6, p) / HW.pe_area(rw)
+
+    best = max((16, 20, 24, 28, 32), key=tpa)
+    assert best == 24, best
+
+
+def test_mixed_precision_gptq_story():
+    """§2.3: W4A16 gives no speedup on TC (mixed operands unsupported) but
+    does on FlexiBit."""
+    wl = WORKLOADS["llama2-7b"]
+    tc_44 = run_workload("tensorcore", "Cloud-B", wl, 16, 16)["latency_s"]
+    tc_mixed = run_workload("tensorcore", "Cloud-B", wl, 4, 16)["latency_s"]
+    fb_mixed = run_workload("flexibit", "Cloud-B", wl, 4, 16)["latency_s"]
+    assert tc_mixed >= tc_44 * 0.99  # no speedup from W4 on TC
+    assert fb_mixed < 0.8 * tc_mixed  # FlexiBit exploits W4

@@ -1,0 +1,248 @@
+"""Runtime substrate tests: optimizer, schedules, grad compression, data
+pipeline, checkpointing, fault tolerance, microbatching."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.checkpoint import ckpt
+from repro.models.nn import init_params
+from repro.models.registry import build_model
+from repro.optim import adamw, grad_comp
+from repro.optim.schedule import warmup_cosine
+from repro.runtime.fault import ResilientLoop
+from repro.runtime.train_loop import TrainConfig, init_state, make_train_step
+
+
+def _tiny_model():
+    cfg = reduce_for_smoke(get_config("qwen1.5-0.5b"))
+    return build_model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_quadratic_convergence():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([4.0, -3.0, 2.0])}
+    opt = adamw.init(params, cfg)
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw.update(grads, opt, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+@pytest.mark.parametrize("mfmt,vfmt", [("int8", "e4m3"), (None, None)])
+def test_adamw_quantized_moments_still_converge(mfmt, vfmt):
+    cfg = adamw.AdamWConfig(lr=0.05, weight_decay=0.0, moment_fmt=mfmt,
+                            second_fmt=vfmt)
+    params = {"w": jnp.linspace(-2, 2, 512)}
+    opt = adamw.init(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw.update(grads, opt, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_grad_clip_bounds_update():
+    cfg = adamw.AdamWConfig(lr=1.0, grad_clip=1e-3, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    opt = adamw.init(params, cfg)
+    grads = {"w": jnp.full(4, 1e6)}
+    new, _, m = adamw.update(grads, opt, params, cfg)
+    assert float(m["grad_norm"]) > 1e5
+    assert float(jnp.abs(new["w"]).max()) < 20.0  # clipped, not 1e6-scaled
+
+
+def test_warmup_cosine_shape():
+    xs = [float(warmup_cosine(jnp.int32(s), warmup=10, total=100))
+          for s in [0, 5, 10, 50, 100]]
+    assert xs[0] == 0.0 and xs[1] == pytest.approx(0.5)
+    assert xs[2] == pytest.approx(1.0)
+    assert xs[2] > xs[3] > xs[4] >= 0.1 - 1e-6
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 2**31 - 1), fmt=st.sampled_from(["int8", "e4m3"]))
+@settings(max_examples=20, deadline=None)
+def test_ef_compression_error_is_carried(seed, fmt):
+    """Error feedback invariant: compressed + residual' == g + residual."""
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.standard_normal(300).astype(np.float32))}
+    r = {"w": jnp.asarray(rng.standard_normal(300).astype(np.float32) * 0.1)}
+    q, r2 = grad_comp.ef_compress(g, r, fmt)
+    lhs = np.asarray(q["w"]) + np.asarray(r2["w"])
+    rhs = np.asarray(g["w"]) + np.asarray(r["w"])
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-5)
+
+
+def test_ef_compression_mean_preserving_over_time():
+    """Accumulated EF-compressed sum tracks the true gradient sum."""
+    rng = np.random.default_rng(0)
+    true_sum = np.zeros(128, np.float32)
+    comp_sum = np.zeros(128, np.float32)
+    r = {"w": jnp.zeros(128)}
+    for _ in range(50):
+        g = rng.standard_normal(128).astype(np.float32)
+        true_sum += g
+        q, r = grad_comp.ef_compress({"w": jnp.asarray(g)}, r, "int8")
+        comp_sum += np.asarray(q["w"])
+    resid = np.abs(true_sum - comp_sum).max()
+    assert resid < 0.5, resid  # bounded by one quantization step
+
+
+def test_quantize_dequantize_error_bound():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(4096).astype(np.float32) * 3)
+    q = grad_comp.quantize_dequantize(x, "int8")
+    err = np.abs(np.asarray(q) - np.asarray(x)).max()
+    assert err <= float(jnp.abs(x).max()) / 127 * 1.01
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_data_deterministic_and_sharded():
+    full = SyntheticLM(1000, 16, 8, seed=7, num_shards=1, shard=0)
+    s0 = SyntheticLM(1000, 16, 8, seed=7, num_shards=2, shard=0)
+    s1 = SyntheticLM(1000, 16, 8, seed=7, num_shards=2, shard=1)
+    b_full = full.batch(3)
+    again = SyntheticLM(1000, 16, 8, seed=7).batch(3)
+    np.testing.assert_array_equal(b_full["tokens"], again["tokens"])
+    # shards are disjoint streams with the right local batch
+    assert s0.batch(3)["tokens"].shape == (4, 16)
+    assert not np.array_equal(s0.batch(3)["tokens"], s1.batch(3)["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b_full["tokens"][:, 1:],
+                                  b_full["labels"][:, :-1])
+
+
+def test_prefetcher_delivers_in_order():
+    src = SyntheticLM(100, 8, 4, seed=1)
+    pf = Prefetcher(src, depth=2)
+    try:
+        b0, b1 = pf.next(), pf.next()
+        np.testing.assert_array_equal(b0["tokens"], src.batch(0)["tokens"])
+        np.testing.assert_array_equal(b1["tokens"], src.batch(1)["tokens"])
+    finally:
+        pf.close()
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    state = {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+             "step": jnp.int32(5)}
+    for s in (1, 2, 3, 4):
+        ckpt.save(state, tmp_path, s, keep=2)
+    assert ckpt.latest_step(tmp_path) == 4
+    remaining = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(remaining) == 2  # gc kept last 2
+    like = jax.tree.map(np.asarray, state)
+    restored, step = ckpt.restore(like, tmp_path)
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.arange(12.0).reshape(3, 4))
+
+
+def test_checkpoint_integrity_detection(tmp_path):
+    state = {"w": jnp.ones(8)}
+    d = ckpt.save(state, tmp_path, 1)
+    # corrupt the payload
+    victim = next(d.glob("*.npy"))
+    data = bytearray(victim.read_bytes())
+    data[-1] ^= 0xFF
+    victim.write_bytes(bytes(data))
+    with pytest.raises(IOError):
+        ckpt.restore({"w": np.ones(8)}, tmp_path)
+
+
+def test_async_checkpointer(tmp_path):
+    state = {"w": jnp.full(16, 3.0)}
+    ac = ckpt.AsyncCheckpointer(tmp_path)
+    ac.save(state, 10)
+    ac.wait()
+    assert ckpt.latest_step(tmp_path) == 10
+
+
+# ---------------------------------------------------------------------------
+# train step + fault tolerance (end to end, tiny model)
+# ---------------------------------------------------------------------------
+
+
+def test_microbatched_train_step_matches_full_batch():
+    model = _tiny_model()
+    tc1 = TrainConfig(microbatches=1,
+                      opt=adamw.AdamWConfig(lr=1e-3, weight_decay=0.0))
+    tc2 = TrainConfig(microbatches=2,
+                      opt=adamw.AdamWConfig(lr=1e-3, weight_decay=0.0))
+    key = jax.random.key(0)
+    s1 = init_state(model, key, tc1)
+    s2 = init_state(model, key, tc2)
+    data = SyntheticLM(model.cfg.vocab_size, 16, 4, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    s1n, m1 = jax.jit(make_train_step(model, tc1))(s1, batch)
+    s2n, m2 = jax.jit(make_train_step(model, tc2))(s2, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-4)
+    w1 = np.asarray(jax.tree.leaves(s1n["params"])[0])
+    w2 = np.asarray(jax.tree.leaves(s2n["params"])[0])
+    np.testing.assert_allclose(w1, w2, rtol=2e-3, atol=2e-5)
+
+
+def test_resilient_loop_recovers_from_crashes(tmp_path):
+    model = _tiny_model()
+    tc = TrainConfig(microbatches=1, opt=adamw.AdamWConfig(lr=1e-3))
+    state = init_state(model, jax.random.key(1), tc)
+    data = SyntheticLM(model.cfg.vocab_size, 16, 4, seed=2)
+    step_fn = jax.jit(make_train_step(model, tc))
+
+    crashes = {4: "crash", 9: "crash"}
+    fired = set()
+
+    def hook(step):
+        if step in crashes and step not in fired:
+            fired.add(step)
+            return crashes[step]
+        return None
+
+    loop = ResilientLoop(step_fn, state, data, tmp_path, ckpt_every=3,
+                         failure_hook=hook)
+    out = loop.run(12)
+    assert out["final_step"] == 12
+    assert out["restarts"] == 2
+    kinds = [e.kind for e in out["events"]]
+    assert kinds.count("step_failure") == 2
+    # training actually progressed past both failures
+    assert int(np.asarray(loop.state["step"])) == 12
+
+
+def test_resilient_loop_detects_stragglers(tmp_path):
+    model = _tiny_model()
+    tc = TrainConfig(microbatches=1)
+    state = init_state(model, jax.random.key(3), tc)
+    data = SyntheticLM(model.cfg.vocab_size, 16, 4, seed=3)
+    step_fn = jax.jit(make_train_step(model, tc))
+
+    def hook(step):
+        return "slow" if step == 8 else None
+
+    loop = ResilientLoop(step_fn, state, data, tmp_path, ckpt_every=100,
+                         straggler_factor=3.0, failure_hook=hook)
+    out = loop.run(10)
+    assert any(e.kind == "straggler" for e in out["events"])
